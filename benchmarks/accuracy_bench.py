@@ -1,0 +1,80 @@
+"""uGEMM stochastic-accuracy benchmark (paper §II-A / §V claims) and
+Pallas-kernel micro-benchmarks."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gemm_sims as gs
+from repro.core.quantization import quantize, vmax
+from repro.kernels import ops, ref
+
+
+def ugemm_accuracy():
+    """GEMM-level relative RMSE of the unified stochastic simulator, per
+    bit-width, plus exact-design bit-identity checks."""
+    rng = np.random.default_rng(0)
+    rows = []
+    errs = []
+    for bits in (2, 4, 8):
+        v = vmax(bits)
+        a = jnp.asarray(rng.integers(-v, v + 1, (16, 64)), jnp.int8)
+        b = jnp.asarray(rng.integers(-v, v + 1, (64, 16)), jnp.int8)
+        oracle = np.asarray(gs.bgemm_exact(a, b), np.float64)
+        est = np.asarray(gs.ugemm_exact(a, b, bits=bits), np.float64)
+        rel = float(np.sqrt(np.mean((est - oracle) ** 2)) /
+                    np.sqrt(np.mean(oracle ** 2)))
+        rows.append((f"ugemm_{bits}b_gemm_relRMSE", rel, None))
+        # deterministic designs: exact
+        tu = np.asarray(gs.tugemm_stream(a[:, :8], b[:8], bits)[0])
+        tub = np.asarray(gs.tubgemm_stream(a[:, :8], b[:8], bits)[0])
+        o = np.asarray(gs.bgemm_exact(a[:, :8], b[:8]))
+        exact = float(np.array_equal(tu, o) and np.array_equal(tub, o))
+        rows.append((f"exact_designs_bitidentical_{bits}b", exact, 1.0))
+        errs.append(0.0 if exact else 1.0)
+    # the paper's qualitative claim: error small at 8-bit, zero at 2-bit
+    err8 = [r for n, r, _ in rows if n == "ugemm_8b_gemm_relRMSE"][0]
+    err2 = [r for n, r, _ in rows if n == "ugemm_2b_gemm_relRMSE"][0]
+    errs.append(0.0 if (err8 < 0.04 and err2 == 0.0) else 1.0)
+    return rows, max(errs)
+
+
+def kernel_micro(repeats: int = 3):
+    """Wall-time of the Pallas quant_gemm (interpret mode on CPU — correctness
+    path; TPU timings require real hardware) vs the jnp reference."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for bits, (m, k, n) in ((8, (256, 512, 256)), (4, (256, 512, 256)),
+                            (2, (256, 512, 256))):
+        v = vmax(bits)
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-v, v + 1, (k, n)), jnp.int8)
+        wp = ops.pack_values(w, bits, axis=0)
+        # warmup + check
+        got = ops.int_matmul(x, wp, bits=bits, interpret=True)
+        want = ref.quant_gemm_ref(x, wp, bits=bits)
+        ok = bool(jnp.all(got == want))
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ops.int_matmul(x, wp, bits=bits, interpret=True).block_until_ready()
+        t_kernel = (time.perf_counter() - t0) / repeats * 1e6
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            ref.quant_gemm_ref(x, wp, bits=bits).block_until_ready()
+        t_ref = (time.perf_counter() - t0) / repeats * 1e6
+        rows.append((f"quant_gemm_{bits}b_{m}x{k}x{n}_us", t_kernel, t_ref))
+        rows.append((f"quant_gemm_{bits}b_allclose", float(ok), 1.0))
+    # bit-sparsity kernel
+    q = quantize(jnp.asarray(rng.normal(0, 0.05, (1024, 1024)), jnp.float32),
+                 bits=8, per_channel=False).values
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        ops.bit_sparsity_stats(q, bits=8, interpret=True)[1].block_until_ready()
+    rows.append(("bitsparsity_1024x1024_us",
+                 (time.perf_counter() - t0) / repeats * 1e6, None))
+    err = 0.0 if all(r == 1.0 for nm, r, ref_ in rows if nm.endswith("allclose")) else 1.0
+    return rows, err

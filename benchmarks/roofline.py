@@ -1,0 +1,61 @@
+"""Aggregate the dry-run JSONs into the §Roofline table (per arch x shape x
+mesh: three terms, dominant bottleneck, MODEL_FLOPS ratio, roofline fraction)
+and emit the markdown EXPERIMENTS.md consumes."""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
+    recs = []
+    if not os.path.isdir(dryrun_dir):
+        return recs
+    for name in sorted(os.listdir(dryrun_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(dryrun_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def roofline_rows(mesh: str = "16x16", dryrun_dir: str = DRYRUN_DIR):
+    """CSV-ish rows for benchmarks.run — single-pod mesh only per assignment."""
+    rows = []
+    for r in load_records(dryrun_dir):
+        if r["mesh"] != mesh or r.get("ep_impl") == "a2a":
+            continue
+        rl = r["roofline"]
+        tag = f"{r['arch']}_{r['shape']}"
+        rows.append((f"{tag}_dominant_{rl['dominant']}", rl["step_time_s"], None))
+        rows.append((f"{tag}_useful_ratio", rl["useful_flops_ratio"], None))
+        rows.append((f"{tag}_roofline_frac", rl["roofline_fraction"], None))
+    return rows, 0.0
+
+
+def markdown_table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16") -> str:
+    lines = [
+        "| arch | shape | compute (s) | memory (s) | collective (s) | dominant "
+        "| useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load_records(dryrun_dir):
+        if r["mesh"] != mesh or r.get("ep_impl") == "a2a":
+            continue
+        rl = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {rl['compute_s']:.3e} | "
+            f"{rl['memory_s']:.3e} | {rl['collective_s']:.3e} | "
+            f"{rl['dominant']} | {rl['useful_flops_ratio']:.2f} | "
+            f"{rl['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    print(markdown_table())
+
+
+if __name__ == "__main__":
+    main()

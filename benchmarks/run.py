@@ -1,0 +1,70 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per the harness contract: ``name`` is
+the benchmark, ``us_per_call`` is its wall time, ``derived`` is the headline
+quality metric (max relative error vs the paper's published numbers — 0 means
+an exact reproduction; for benchmarks without published targets it is the
+number of rows produced).
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--details]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    rows, err = fn(*args, **kw)
+    return rows, err, (time.perf_counter() - t0) * 1e6
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="include the slow per-arch sparsity profiling sweep")
+    ap.add_argument("--details", action="store_true",
+                    help="print every table row, not just the CSV summary")
+    args = ap.parse_args(sys.argv[1:])
+
+    from benchmarks import accuracy_bench, roofline, sparsity_bench, tables
+
+    benches = [
+        ("table1_area", tables.table1_area, {}),
+        ("table2_power", tables.table2_power, {}),
+        ("table3_energy", tables.table3_energy, {}),
+        ("table4_tpu_sizes", tables.table4_tpu_sizes, {}),
+        ("fig2_scaling", tables.fig2_scaling, {}),
+        ("fig3_sparsity_energy", tables.fig3_sparsity_energy, {}),
+        ("table5_llama2_calibration", sparsity_bench.llama2_calibration, {}),
+        ("ugemm_accuracy", accuracy_bench.ugemm_accuracy, {}),
+        ("kernel_micro", accuracy_bench.kernel_micro, {}),
+        ("roofline_dryrun", roofline.roofline_rows, {}),
+    ]
+    if args.full:
+        benches.append(("table5_arch_sparsity",
+                        sparsity_bench.arch_sparsity_table, {}))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn, kw in benches:
+        try:
+            rows, err, us = _timed(fn, **kw)
+            derived = err if err is not None else len(rows)
+            print(f"{name},{us:.0f},{derived:.6f}")
+            if args.details:
+                for rname, got, ref in rows:
+                    refs = "" if ref is None else f" (paper: {ref})"
+                    print(f"#   {rname}: {got}{refs}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},NaN,FAILED:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Benchmark modules regenerating every table/figure of the paper from the
+calibrated model + simulators, with pass/fail deltas against the published
+numbers.  Each ``table*`` function returns (rows, max_rel_err)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import paper_gemm
+from repro.core import ppa
+from repro.core.gemm_sims import DESIGNS, wc_cycles
+
+
+def table1_area():
+    """Table I: post-synthesis area (um^2)."""
+    rows = []
+    for cell in paper_gemm.table_grid():
+        got = ppa.area_um2(cell.design, cell.bits, cell.n)
+        ref = ppa.AREA_UM2[(cell.bits, cell.n)][cell.design]
+        rows.append((f"{cell.bits}b_{cell.n}x{cell.n}_{cell.design}", got, ref))
+    err = max(abs(g - r) / r for _, g, r in rows)
+    return rows, err
+
+
+def table2_power():
+    """Table II: post-synthesis power (mW)."""
+    rows = []
+    for cell in paper_gemm.table_grid():
+        got = ppa.power_mw(cell.design, cell.bits, cell.n)
+        ref = ppa.POWER_MW[(cell.bits, cell.n)][cell.design]
+        rows.append((f"{cell.bits}b_{cell.n}x{cell.n}_{cell.design}", got, ref))
+    err = max(abs(g - r) / r for _, g, r in rows)
+    return rows, err
+
+
+def table3_energy():
+    """Table III: energy (nJ) at worst-case latency — derived, not stored."""
+    rows = []
+    for cell in paper_gemm.table_grid():
+        got = ppa.energy_nj(cell.design, cell.bits, cell.n)
+        ref = ppa.PAPER_ENERGY_NJ[(cell.bits, cell.n)][cell.design]
+        rows.append((f"{cell.bits}b_{cell.n}x{cell.n}_{cell.design}", got, ref))
+    err = max(abs(g - r) / r for _, g, r in rows)
+    return rows, err
+
+
+def table4_tpu_sizes():
+    """Table IV: EdgeTPU (64) / CloudTPUv3 (128) area, power, energy, ADP."""
+    rows = []
+    errs = []
+    for cell in paper_gemm.tpu_grid():
+        a = ppa.area_um2(cell.design, cell.bits, cell.n) * 1e-6
+        p = ppa.power_mw(cell.design, cell.bits, cell.n)
+        e = ppa.energy_nj(cell.design, cell.bits, cell.n)
+        adp = ppa.adp_mm2_ns(cell.design, cell.bits, cell.n)
+        e_ref = ppa.PAPER_ENERGY_NJ[(cell.bits, cell.n)][cell.design]
+        adp_ref = ppa.PAPER_ADP_MM2_NS[(cell.bits, cell.n)][cell.design]
+        rows.append((f"4b_{cell.n}x{cell.n}_{cell.design}_area_mm2", a, None))
+        rows.append((f"4b_{cell.n}x{cell.n}_{cell.design}_power_mW", p, None))
+        rows.append((f"4b_{cell.n}x{cell.n}_{cell.design}_energy_nJ", e, e_ref))
+        rows.append((f"4b_{cell.n}x{cell.n}_{cell.design}_ADP", adp, adp_ref))
+        errs.append(abs(e - e_ref) / e_ref)
+        errs.append(abs(adp - adp_ref) / adp_ref)
+    return rows, max(errs)
+
+
+def fig2_scaling():
+    """Fig. 2: per-bitwidth-doubling scaling slopes at 32x32."""
+    paper_area = dict(ugemm=2.16, tugemm=2.12, tubgemm=2.12, bgemm=2.90)
+    paper_power = dict(ugemm=1.56, tugemm=2.02, tubgemm=2.15, bgemm=3.25)
+    rows, errs = [], []
+    for d in DESIGNS:
+        a = ppa.fig2_slope(ppa.AREA_UM2, d)
+        p = ppa.fig2_slope(ppa.POWER_MW, d)
+        rows.append((f"area_slope_{d}", a, paper_area[d]))
+        rows.append((f"power_slope_{d}", p, paper_power[d]))
+        errs += [abs(a - paper_area[d]) / paper_area[d],
+                 abs(p - paper_power[d]) / paper_power[d]]
+    return rows, max(errs)
+
+
+# Paper Table V (published sparsity values) — inputs to the Fig. 3 analysis.
+PAPER_TABLE5_BIT_SPARSITY = {
+    # CNNs, 8-bit
+    "MobileNetV2": 0.4466, "MobileNetV3": 0.3859, "GoogleNet": 0.4591,
+    "InceptionV3": 0.4561, "ShuffleNetV3": 0.4718, "ResNet18": 0.4530,
+    "ResNet50": 0.4624, "ResNeXt101": 0.4423,
+    # LLaMA2-70B (2/4/8-bit)
+    "llama2_fc_2b": 0.50, "llama2_fc_4b": 0.125, "llama2_fc_8b": 0.0082,
+    "llama2_ffn_2b": 0.50, "llama2_ffn_4b": 0.125, "llama2_ffn_8b": 0.0080,
+    "llama2_q_2b": 0.0056, "llama2_q_4b": 0.0889, "llama2_q_8b": 0.2884,
+    "llama2_k_2b": 0.0819, "llama2_k_4b": 0.0858, "llama2_k_8b": 0.3252,
+}
+
+
+def fig3_sparsity_energy():
+    """Fig. 3: 32x32 energy, worst-case vs sparsity-scaled (Eq. 1).
+
+    Reproduces the three highlighted effects: (1) larger 2-bit tubGEMM gap to
+    bGEMM, (2) earlier tub/b crossover, (3) larger 8-bit gap to uGEMM.
+    """
+    cnn_bspa = float(np.mean([v for k, v in PAPER_TABLE5_BIT_SPARSITY.items()
+                              if not k.startswith("llama2")]))
+    rows = []
+    for bits in (2, 4, 8):
+        for d in DESIGNS:
+            wc = ppa.energy_nj(d, bits, 32)
+            dyn = ppa.dynamic_energy_nj(d, bits, 32, cnn_bspa)
+            rows.append((f"{bits}b_32x32_{d}_wc_nJ", wc, None))
+            rows.append((f"{bits}b_32x32_{d}_dyn_nJ", dyn, None))
+    # the three claims as derived booleans (1.0 = holds)
+    gap2_wc = ppa.energy_nj("bgemm", 2, 32) / ppa.energy_nj("tubgemm", 2, 32)
+    gap2_dyn = ppa.energy_nj("bgemm", 2, 32) / \
+        ppa.dynamic_energy_nj("tubgemm", 2, 32, cnn_bspa)
+    claim1 = float(gap2_dyn > gap2_wc)
+    ratio4_wc = ppa.energy_nj("tubgemm", 4, 32) / ppa.energy_nj("bgemm", 4, 32)
+    ratio4_dyn = ppa.dynamic_energy_nj("tubgemm", 4, 32, cnn_bspa) / \
+        ppa.energy_nj("bgemm", 4, 32)
+    claim2 = float(ratio4_dyn < ratio4_wc)
+    gap8_wc = ppa.energy_nj("ugemm", 8, 32) / ppa.energy_nj("tubgemm", 8, 32)
+    gap8_dyn = ppa.energy_nj("ugemm", 8, 32) / \
+        ppa.dynamic_energy_nj("tubgemm", 8, 32, cnn_bspa)
+    claim3 = float(gap8_dyn > gap8_wc)
+    rows += [("claim_2bit_gap_grows", claim1, 1.0),
+             ("claim_earlier_crossover", claim2, 1.0),
+             ("claim_8bit_ugemm_gap_grows", claim3, 1.0)]
+    err = 0.0 if (claim1 and claim2 and claim3) else 1.0
+    return rows, err

@@ -1,0 +1,37 @@
+"""Example 4: drive the multi-pod dry-run programmatically for one cell and
+pretty-print the roofline terms (what `repro.launch.dryrun --all` does for
+every cell).
+
+NOTE: must run in a fresh process (sets XLA_FLAGS before jax init).
+
+    PYTHONPATH=src python examples/multipod_dryrun.py --arch llama3-8b \
+        --shape decode_32k --multi-pod
+"""
+
+import argparse
+import json
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    # import AFTER parsing so --help doesn't spin up 512 devices
+    from repro.launch.dryrun import run_cell
+
+    rec = run_cell(args.arch, args.shape, args.multi_pod, out_dir=None)
+    rl = rec.pop("roofline")
+    print(json.dumps(rec, indent=1, default=str)[:1200])
+    print("\nroofline terms (per chip):")
+    print(f"  compute    {rl['compute_s']:.3e} s")
+    print(f"  memory     {rl['memory_s']:.3e} s")
+    print(f"  collective {rl['collective_s']:.3e} s")
+    print(f"  dominant   {rl['dominant']}")
+    print(f"  useful-FLOPs ratio {rl['useful_flops_ratio']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+"""Checkpoint substrate: atomic, keep-k, async, elastic-reshardable."""
+
+from repro.checkpoint.manager import CheckpointManager, latest_step, restore, save
+
+__all__ = ["CheckpointManager", "latest_step", "restore", "save"]

@@ -1,0 +1,159 @@
+"""Fault-tolerant checkpointing: atomic sharded save/restore, keep-last-k,
+async writer, auto-resume, and cross-mesh (elastic) resharding.
+
+Layout (mesh-agnostic — every leaf is saved as its *global* array, so a
+checkpoint written on a 256-chip mesh restores onto 512 chips or 1 CPU):
+
+    <dir>/step_000042/
+        manifest.json      # {key_path: {file, shape, dtype}}, step, extras
+        <leaf>.npy         # one file per pytree leaf
+        COMPLETE           # written last; restore ignores dirs without it
+
+Atomicity: written into ``step_X.tmp`` then ``os.rename``d (POSIX-atomic), so
+a crash mid-save can never corrupt the latest checkpoint — the standard
+checkpoint/restart contract for node failures.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+
+_STEP_RE = re.compile(r"^step_(\d+)$")
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        leaves.append((key, leaf))
+    return leaves, flat[1]
+
+
+def save(ckpt_dir: str, step: int, tree: Any, extras: dict | None = None) -> str:
+    """Blocking atomic save.  Returns the final directory path."""
+    final = os.path.join(ckpt_dir, f"step_{step:09d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp, exist_ok=True)
+    leaves, _ = _flatten(tree)
+    manifest = {"step": step, "extras": extras or {}, "leaves": {}}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"][key] = {
+            "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, "COMPLETE"), "w") as f:
+        f.write("ok")
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a COMPLETE marker (ignores partial/corrupt saves)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m and os.path.exists(os.path.join(ckpt_dir, name, "COMPLETE")):
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, target: Any, step: int | None = None,
+            shardings: Any = None) -> tuple[Any, int, dict]:
+    """Restore into the structure of ``target``.
+
+    ``shardings``: optional matching pytree of NamedShardings — this is the
+    *elastic* path: global arrays are re-laid-out onto whatever mesh the
+    restored job runs on (different chip count than the writer is fine).
+    Returns (tree, step, extras).
+    """
+    step = latest_step(ckpt_dir) if step is None else step
+    if step is None:
+        raise FileNotFoundError(f"no complete checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:09d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves, treedef = _flatten(target)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(leaves))
+    out = []
+    for (key, tgt), shd in zip(leaves, shard_leaves):
+        ent = manifest["leaves"].get(key)
+        if ent is None:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = np.load(os.path.join(d, ent["file"]))
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} "
+                             f"vs target {tgt.shape}")
+        arr = arr.astype(tgt.dtype)
+        out.append(jax.device_put(arr, shd) if shd is not None else arr)
+    tree = jax.tree_util.tree_unflatten(treedef, out)
+    return tree, step, manifest.get("extras", {})
+
+
+class CheckpointManager:
+    """keep-last-k retention + optional async (background-thread) saves."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: threading.Thread | None = None
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, step: int, tree: Any, extras: dict | None = None):
+        # Materialize on host *before* returning so the training loop can
+        # donate/overwrite device buffers safely.
+        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(jax.device_get(x)),
+                                           tree)
+
+        def work():
+            save(self.dir, step, host_tree, extras)
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def restore_latest(self, target: Any, shardings: Any = None):
+        self.wait()
+        return restore(self.dir, target, shardings=shardings)
+
+    def has_checkpoint(self) -> bool:
+        return latest_step(self.dir) is not None
+
+    def _gc(self):
+        steps = sorted(
+            int(m.group(1)) for m in
+            (_STEP_RE.match(n) for n in os.listdir(self.dir)) if m)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            p = os.path.join(self.dir, f"step_{s:09d}")
+            if os.path.exists(os.path.join(p, "COMPLETE")):
+                shutil.rmtree(p, ignore_errors=True)

@@ -1,0 +1,22 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+- quantization  : INT2/4/8 symmetric quantization
+- unary         : temporal-unary / 2-unary / rate-coded encodings
+- gemm_sims     : functional + cycle-accurate simulators for the 4 GEMM units
+- ppa           : calibrated Nangate45 PPA model (paper Tables I-IV)
+- sparsity      : word/bit sparsity profiling (Table V, Eq. 1)
+- accounting    : end-to-end DLA energy/latency pricing of model workloads
+"""
+
+from repro.core import accounting, gemm_sims, ppa, quantization, sparsity, unary
+from repro.core.gemm_sims import DESIGNS, gemm, wc_cycles
+from repro.core.ppa import DLAModel, PPAQuery
+from repro.core.quantization import QuantConfig, Quantized, fake_quant, quantize
+from repro.core.sparsity import SparsityStats, profile_tensor, profile_tree
+
+__all__ = [
+    "accounting", "gemm_sims", "ppa", "quantization", "sparsity", "unary",
+    "DESIGNS", "gemm", "wc_cycles", "DLAModel", "PPAQuery",
+    "QuantConfig", "Quantized", "fake_quant", "quantize",
+    "SparsityStats", "profile_tensor", "profile_tree",
+]

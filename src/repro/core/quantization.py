@@ -1,0 +1,134 @@
+"""INT2/4/8 symmetric quantization used by every unary/binary GEMM backend.
+
+The paper evaluates integer GEMM units at w ∈ {2, 4, 8} bits.  We use symmetric
+(zero-point-free) quantization so that the temporal-unary encodings — which
+represent signed magnitudes as runs of 1s — map directly onto quantized values:
+
+    q = clip(round(x / s), -Vmax, Vmax),   Vmax = 2^(w-1) - 1
+
+Weights are quantized per output channel (axis=-1 of the (in, out) matrix),
+activations per tensor, matching common INT-inference practice and the paper's
+"quantized INT8 CNNs from torchvision" setup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "QuantConfig",
+    "Quantized",
+    "vmax",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "quantize_per_channel",
+    "quantize_per_tensor",
+]
+
+
+def vmax(bits: int) -> int:
+    """Largest representable magnitude for a signed w-bit integer (symmetric)."""
+    if bits < 2:
+        raise ValueError(f"bits must be >= 2, got {bits}")
+    return 2 ** (bits - 1) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static quantization parameters for one GEMM operand."""
+
+    bits: int = 8
+    per_channel: bool = True  # reduce scale over all-but-last axis
+    # Percentile-free absmax calibration; stochastic rounding is off by default
+    # (the paper's units consume deterministic integer operands).
+    stochastic_rounding: bool = False
+
+    @property
+    def vmax(self) -> int:
+        return vmax(self.bits)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Quantized:
+    """A quantized tensor: integer values + float scale(s).
+
+    ``values`` has an integer dtype (int8 container for all of w∈{2,4,8});
+    ``scale`` broadcasts against ``values`` so ``values * scale ≈ original``.
+    """
+
+    values: jax.Array
+    scale: jax.Array
+    bits: int
+
+    def tree_flatten(self):
+        return (self.values, self.scale), (self.bits,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        values, scale = children
+        return cls(values=values, scale=scale, bits=aux[0])
+
+    def dequantize(self) -> jax.Array:
+        return self.values.astype(self.scale.dtype) * self.scale
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+
+def _absmax_scale(x: jax.Array, bits: int, axes) -> jax.Array:
+    amax = jnp.max(jnp.abs(x), axis=axes, keepdims=True)
+    # Avoid division by zero for all-zero channels.
+    amax = jnp.maximum(amax, jnp.finfo(x.dtype).tiny)
+    return amax / vmax(bits)
+
+
+@partial(jax.jit, static_argnames=("bits", "per_channel", "stochastic_rounding"))
+def quantize(
+    x: jax.Array,
+    bits: int = 8,
+    per_channel: bool = True,
+    stochastic_rounding: bool = False,
+    rng: jax.Array | None = None,
+) -> Quantized:
+    """Symmetric absmax quantization to w-bit signed integers (int8 container)."""
+    if per_channel and x.ndim >= 2:
+        axes = tuple(range(x.ndim - 1))
+    else:
+        axes = tuple(range(x.ndim))
+    scale = _absmax_scale(x, bits, axes)
+    y = x / scale
+    if stochastic_rounding:
+        if rng is None:
+            raise ValueError("stochastic_rounding requires rng")
+        noise = jax.random.uniform(rng, x.shape, x.dtype) - 0.5
+        q = jnp.floor(y + 0.5 + noise)
+    else:
+        q = jnp.round(y)
+    q = jnp.clip(q, -vmax(bits), vmax(bits)).astype(jnp.int8)
+    return Quantized(values=q, scale=scale.astype(jnp.float32), bits=bits)
+
+
+def quantize_per_channel(x: jax.Array, bits: int = 8) -> Quantized:
+    return quantize(x, bits=bits, per_channel=True)
+
+
+def quantize_per_tensor(x: jax.Array, bits: int = 8) -> Quantized:
+    return quantize(x, bits=bits, per_channel=False)
+
+
+def dequantize(q: Quantized) -> jax.Array:
+    return q.dequantize()
+
+
+@partial(jax.jit, static_argnames=("bits", "per_channel"))
+def fake_quant(x: jax.Array, bits: int = 8, per_channel: bool = True) -> jax.Array:
+    """Quantize-dequantize in the original dtype (QAT forward / error studies)."""
+    q = quantize(x, bits=bits, per_channel=per_channel)
+    return q.dequantize().astype(x.dtype)

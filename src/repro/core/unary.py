@@ -1,0 +1,166 @@
+"""Unary encodings: temporal-unary, 2-unary (tubGEMM), and rate-coded bitstreams.
+
+Encoding conventions (bipolar / signed-magnitude, per the paper's non-scaled
+bipolar compute):
+
+* **temporal-unary** — a w-bit signed value ``v`` with ``|v| <= Vmax = 2^(w-1)-1``
+  is a stream of ``Vmax`` slots: ``|v|`` consecutive 1s followed by 0s, plus a
+  sign wire.  Exactly two signal transitions per stream → the paper's power
+  argument for tu/tubGEMM.
+
+* **2-unary (tubGEMM)** — ``|v| = 2*v1 + v0`` where ``v1`` streams over
+  ``2^(w-2)`` slots with weight 2 and ``v0 ∈ {0,1}`` rides the first slot with
+  weight 1.  Halves stream length vs. plain temporal-unary; still deterministic.
+
+* **rate-unary (uGEMM)** — ``2^w`` slots; slot t is 1 iff ``ldseq(t) < p`` where
+  ``p`` is the normalized magnitude and ``ldseq`` is a low-discrepancy sequence
+  (van der Corput base-2 — the deterministic comparator uGEMM-style units use).
+  Value is recovered as the 1s-frequency; multiplication is a slot-wise AND.
+
+All encoders are shape-polymorphic: streams are materialized on a new leading
+axis of length ``stream_len`` so downstream `lax` reductions/scan can consume
+them.  These are *simulation* utilities — the fast inference path never
+materializes streams; only the cycle-accurate simulators and tests do.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import vmax
+
+__all__ = [
+    "temporal_stream_len",
+    "tub_stream_len",
+    "rate_stream_len",
+    "encode_temporal",
+    "decode_temporal",
+    "encode_tub",
+    "decode_tub",
+    "van_der_corput",
+    "encode_rate",
+    "decode_rate",
+    "ones_count",
+    "bit_sparsity_of_stream",
+]
+
+
+def temporal_stream_len(bits: int) -> int:
+    """tuGEMM stream slots: 2^(w-1), matching the paper's latency formulas.
+
+    Symmetric quantization uses |q| <= Vmax = 2^(w-1)-1, so the last slot is
+    always 0 — the hardware still budgets the full power-of-two stream.
+    """
+    return 2 ** (bits - 1)
+
+
+def tub_stream_len(bits: int) -> int:
+    """tubGEMM 2-unary stream slots (halved via the weight-2 encoding)."""
+    return max(1, 2 ** (bits - 2))
+
+
+def rate_stream_len(bits: int) -> int:
+    """uGEMM rate-coded stream slots."""
+    return 2**bits
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def encode_temporal(q: jax.Array, bits: int) -> tuple[jax.Array, jax.Array]:
+    """q (int) -> (stream[L, ...] of 0/1, sign[...]).  L = Vmax(bits)."""
+    mag = jnp.abs(q.astype(jnp.int32))
+    sign = jnp.sign(q.astype(jnp.int32))
+    slots = jnp.arange(temporal_stream_len(bits), dtype=jnp.int32)
+    slots = slots.reshape((-1,) + (1,) * q.ndim)
+    stream = (slots < mag[None]).astype(jnp.int32)
+    return stream, sign
+
+
+@jax.jit
+def decode_temporal(stream: jax.Array, sign: jax.Array) -> jax.Array:
+    return sign * jnp.sum(stream, axis=0)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def encode_tub(q: jax.Array, bits: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """q -> (stream2[L2,...] weight-2 slots, lsb[...] weight-1 bit, sign[...])."""
+    mag = jnp.abs(q.astype(jnp.int32))
+    sign = jnp.sign(q.astype(jnp.int32))
+    v1 = mag // 2
+    v0 = mag % 2
+    slots = jnp.arange(tub_stream_len(bits), dtype=jnp.int32)
+    slots = slots.reshape((-1,) + (1,) * q.ndim)
+    stream2 = (slots < v1[None]).astype(jnp.int32)
+    return stream2, v0, sign
+
+
+@jax.jit
+def decode_tub(stream2: jax.Array, lsb: jax.Array, sign: jax.Array) -> jax.Array:
+    return sign * (2 * jnp.sum(stream2, axis=0) + lsb)
+
+
+def van_der_corput(n: int) -> jax.Array:
+    """First ``n`` points of the base-2 van der Corput low-discrepancy sequence.
+
+    This is the deterministic "Sobol-like" comparator sequence unified-unary
+    units use; it makes rate streams reproducible and near-ideally spaced.
+    """
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    # Bit-reverse a 32-bit integer, then scale to [0, 1).
+    v = idx
+    v = ((v >> 1) & 0x55555555) | ((v & 0x55555555) << 1)
+    v = ((v >> 2) & 0x33333333) | ((v & 0x33333333) << 2)
+    v = ((v >> 4) & 0x0F0F0F0F) | ((v & 0x0F0F0F0F) << 4)
+    v = ((v >> 8) & 0x00FF00FF) | ((v & 0x00FF00FF) << 8)
+    v = (v >> 16) | (v << 16)
+    return v.astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32) / jnp.float32(2**32)
+
+
+@partial(jax.jit, static_argnames=("bits", "phase"))
+def encode_rate(q: jax.Array, bits: int, phase: int = 0) -> tuple[jax.Array, jax.Array]:
+    """q -> (rate stream[2^w, ...], sign[...]).
+
+    ``phase`` rotates the comparator sequence so two operands of a multiply use
+    decorrelated streams (uGEMM pairs different LD sequences per input port).
+    """
+    L = rate_stream_len(bits)
+    mag = jnp.abs(q.astype(jnp.int32))
+    p = mag.astype(jnp.float32) / jnp.float32(vmax(bits))
+    seq = van_der_corput(L)
+    if phase:
+        seq = jnp.roll(seq, phase)
+        # Decorrelate further: reflect the sequence for the second port.
+        seq = 1.0 - seq
+    seq = seq.reshape((-1,) + (1,) * q.ndim)
+    stream = (seq < p[None]).astype(jnp.int32)
+    sign = jnp.sign(q.astype(jnp.int32))
+    return stream, sign
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def decode_rate(stream: jax.Array, sign: jax.Array, bits: int) -> jax.Array:
+    L = stream.shape[0]
+    freq = jnp.sum(stream, axis=0).astype(jnp.float32) / jnp.float32(L)
+    return sign.astype(jnp.float32) * freq * jnp.float32(vmax(bits))
+
+
+@jax.jit
+def ones_count(stream: jax.Array) -> jax.Array:
+    return jnp.sum(stream, axis=0)
+
+
+@partial(jax.jit, static_argnames=("bits", "scheme"))
+def bit_sparsity_of_stream(q: jax.Array, bits: int, scheme: str = "temporal") -> jax.Array:
+    """Fraction of 0 slots in the unary stream of ``q`` (paper's bit sparsity)."""
+    mag = jnp.abs(q.astype(jnp.float32))
+    if scheme == "temporal":
+        L = temporal_stream_len(bits)
+        ones = mag
+    elif scheme == "tub":
+        L = tub_stream_len(bits)
+        ones = jnp.ceil(mag / 2.0)
+    else:
+        raise ValueError(f"unknown scheme {scheme!r}")
+    return 1.0 - jnp.mean(ones) / L

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic/file token pipelines with host sharding."""
+
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM, TokenFile, make_pipeline
+
+__all__ = ["DataConfig", "Prefetcher", "SyntheticLM", "TokenFile", "make_pipeline"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute (quantized GEMM, sparsity).
+
+- quant_gemm   : tiled int8/int4/int2 matmul, VMEM BlockSpec tiling, MXU dot
+- bitsparsity  : per-PE-tile block-max / zero-count reduction (Eq. 1 stats)
+- ops          : public jit'd wrappers (pack, quantized_matmul, stats)
+- ref          : pure-jnp oracles the tests sweep against
+"""
+
+from repro.kernels import bitsparsity, ops, quant_gemm, ref
+
+__all__ = ["bitsparsity", "ops", "quant_gemm", "ref"]

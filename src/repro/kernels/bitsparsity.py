@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: per-PE-tile bit-sparsity statistics (paper Eq. 1 input).
+
+For a quantized weight matrix, produces — per ``tile x tile`` sub-block (the
+paper's PE-array block, default 32) —
+
+* ``blk_max``  : max |q|   (the value that gates temporal-unary latency), and
+* ``blk_zeros``: count of zero words (word sparsity).
+
+One kernel block covers (bm, bn) = (256, 128) elements = an (8, 4) grid of
+32x32 sub-blocks, so outputs stay TPU-tileable.  The tiny final reduction
+(means over blocks) happens in ``ops.bit_sparsity_stats``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bitsparsity_kernel", "block_stats"]
+
+
+def bitsparsity_kernel(q_ref, max_ref, zero_ref, *, tile: int):
+    q = q_ref[...].astype(jnp.int32)                     # (bm, bn)
+    bm, bn = q.shape
+    a = jnp.abs(q).reshape(bm // tile, tile, bn // tile, tile)
+    max_ref[...] = jnp.max(a, axis=(1, 3)).astype(jnp.int32)
+    z = (q == 0).astype(jnp.int32).reshape(bm // tile, tile, bn // tile, tile)
+    zero_ref[...] = jnp.sum(z, axis=(1, 3))
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "block", "interpret"))
+def block_stats(q: jax.Array, *, tile: int = 32,
+                block: tuple[int, int] = (256, 128),
+                interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(M, N) int8 codes -> (ceil(M/tile), ceil(N/tile)) block max / zero count.
+
+    Padding cells are zero; callers mask them (``ops.bit_sparsity_stats``).
+    """
+    if q.ndim != 2:
+        q = q.reshape(-1, q.shape[-1])
+    bm, bn = block
+    if bm % tile or bn % tile:
+        raise ValueError("block must be a multiple of tile")
+    m, n = q.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    qp = jnp.pad(q, ((0, pm), (0, pn)))
+    mp, np_ = qp.shape
+    grid = (mp // bm, np_ // bn)
+    out_shape = (
+        jax.ShapeDtypeStruct((mp // tile, np_ // tile), jnp.int32),
+        jax.ShapeDtypeStruct((mp // tile, np_ // tile), jnp.int32),
+    )
+    bt_m, bt_n = bm // tile, bn // tile
+    maxes, zeros = pl.pallas_call(
+        functools.partial(bitsparsity_kernel, tile=tile),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=(
+            pl.BlockSpec((bt_m, bt_n), lambda i, j: (i, j)),
+            pl.BlockSpec((bt_m, bt_n), lambda i, j: (i, j)),
+        ),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(qp)
+    nr, nc = -(-m // tile), -(-n // tile)
+    return maxes[:nr, :nc], zeros[:nr, :nc]

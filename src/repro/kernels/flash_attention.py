@@ -1,0 +1,297 @@
+"""Pallas TPU flash attention (forward + backward), VMEM-tiled.
+
+This is the fix for the dominant memory-roofline term of the attention archs:
+XLA cannot fuse softmax(QKᵀ)V, so every (S, S) score chunk round-trips HBM
+(measured: ~45% of zamba2/chameleon train_4k HBM traffic).  The kernel keeps
+score tiles in VMEM scratch — HBM traffic collapses to Q/K/V/O (+ the (S,)
+logsumexp residual for the backward).
+
+Forward:  grid (B*H, nq, nk), online softmax carried in VMEM scratch
+          (running max m, normalizer l, accumulator acc); causal tiles beyond
+          the diagonal are skipped via ``pl.when``.
+Backward: standard two-kernel flash bwd with in-kernel recompute —
+          dq kernel over (B*H, nq, nk) and dkv kernel over (B*H, nk, nq) —
+          using the forward's logsumexp and the precomputed row dot
+          ``delta = rowsum(dO * O)``.
+
+Block sizes default to (512, 512): MXU-aligned, (bq*d + bk*d*2 + bq*bk) * 4B
+≈ 2.3 MB VMEM at d=128 — comfortably within a v5e core's 16 MB budget.
+Validated in interpret mode against the jnp oracle (values AND grads) in
+``tests/test_flash_attention.py``; used by the model layer on TPU backends.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "DEFAULT_BQ", "DEFAULT_BK"]
+
+DEFAULT_BQ = 512
+DEFAULT_BK = 512
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
+                causal: bool, scale: float, bq: int, bk: int, nk: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0]                                   # (bq, d)
+        k = k_ref[0]                                   # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        s = s * scale                                  # (bq, bk)
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        m_prev = m_scr[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        corr = jnp.exp(m_prev - m_new)                 # (bq, 1)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        m_scr[...] = m_new
+        pv = jax.lax.dot_general(p.astype(v_ref.dtype), v_ref[0],
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * corr + pv
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l).astype(o_ref.dtype)
+        lse_ref[0] = (m_scr[...] + jnp.log(l))[:, 0]
+
+
+def _fwd(q, k, v, *, causal: bool, bq: int, bk: int, interpret: bool):
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+    out, lse = pl.pallas_call(
+        functools.partial(_fwd_kernel, causal=causal, scale=scale,
+                          bq=bq, bk=bk, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+            jax.ShapeDtypeStruct((bh, sq), jnp.float32),
+        ),
+        scratch_shapes=[
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, 1), jnp.float32),
+            _vmem((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out, lse
+
+
+def _vmem(shape, dtype):
+    try:  # pragma: no cover - TPU path
+        from jax.experimental.pallas import tpu as pltpu
+        return pltpu.VMEM(shape, dtype)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Backward
+# ---------------------------------------------------------------------------
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+               acc_scr, *, causal: bool, scale: float, bq: int, bk: int,
+               nk: int):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0][:, None])            # (bq, bk)
+        dov = jax.lax.dot_general(do_ref[0], v_ref[0],
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        ds = p * (dov - delta_ref[0][:, None]) * scale  # (bq, bk)
+        acc_scr[...] += jax.lax.dot_general(
+            ds.astype(k.dtype), k, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        dq_ref[0] = acc_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, causal: bool, scale: float,
+                bq: int, bk: int, nq: int):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    run = (not causal) or (qi * bq + bq - 1 >= ki * bk)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0]
+        k = k_ref[0]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+        p = jnp.exp(s - lse_ref[0][:, None])            # (bq, bk)
+        dv_scr[...] += jax.lax.dot_general(
+            p.astype(do_ref.dtype), do_ref[0], (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        dov = jax.lax.dot_general(do_ref[0], v_ref[0],
+                                  (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+        ds = p * (dov - delta_ref[0][:, None]) * scale
+        dk_scr[...] += jax.lax.dot_general(
+            ds.astype(q.dtype), q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(qi == nq - 1)
+    def _finalize():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+def _bwd(res, g, *, causal: bool, bq: int, bk: int, interpret: bool):
+    q, k, v, o, lse = res
+    do = g[0] if isinstance(g, tuple) else g
+    bh, sq, d = q.shape
+    skv = k.shape[1]
+    nq, nk = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32),
+                    axis=-1)                               # (BH, S)
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, causal=causal, scale=scale, bq=bq,
+                          bk=bk, nk=nk),
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[_vmem((bq, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk, dv = pl.pallas_call(
+        functools.partial(_dkv_kernel, causal=causal, scale=scale, bq=bq,
+                          bk=bk, nq=nq),
+        grid=(bh, nk, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, j, i: (b, i)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j, i: (b, j, 0)),
+        ),
+        out_shape=(jax.ShapeDtypeStruct(k.shape, k.dtype),
+                   jax.ShapeDtypeStruct(v.shape, v.dtype)),
+        scratch_shapes=[_vmem((bk, d), jnp.float32),
+                        _vmem((bk, d), jnp.float32)],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+    return dq, dk, dv
+
+
+# ---------------------------------------------------------------------------
+# Public op
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, bq, bk, interpret):
+    out, _ = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+    return out
+
+
+def _flash_fwd_rule(q, k, v, causal, bq, bk, interpret):
+    out, lse = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd_rule(causal, bq, bk, interpret, res, g):
+    return _bwd(res, g, causal=causal, bq=bq, bk=bk, interpret=interpret)
+
+
+_flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, bq: int = DEFAULT_BQ,
+                    bk: int = DEFAULT_BK, interpret: bool | None = None):
+    """q/k/v: (B, S, H, D) -> (B, S, H, Dv).  Differentiable flash attention.
+
+    Sequence lengths must divide the block sizes (the model layer guarantees
+    power-of-two seq lens; block sizes clamp to the seq len).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, sq, h, d = q.shape
+    skv = k.shape[1]
+    bq_ = min(bq, sq)
+    bk_ = min(bk, skv)
+    if sq % bq_ or skv % bk_:
+        raise ValueError(f"seq lens ({sq},{skv}) must divide blocks ({bq_},{bk_})")
+    # (B, S, H, D) -> (B*H, S, D)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
+    of = _flash(qf, kf, vf, causal, bq_, bk_, interpret)
+    return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

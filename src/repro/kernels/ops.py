@@ -1,0 +1,99 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``quantized_matmul`` is the end-to-end float -> float op the modeling layer
+calls: quantize activations per-tensor, run the packed integer kernel, apply
+the folded dequant scales.  ``interpret`` defaults to True off-TPU so the same
+code path runs in this CPU container and compiles natively on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import Quantized, quantize, vmax
+from repro.kernels import bitsparsity as _bs
+from repro.kernels import quant_gemm as _qg
+
+__all__ = [
+    "on_tpu",
+    "pack_values",
+    "quantized_matmul",
+    "int_matmul",
+    "bit_sparsity_stats",
+]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret_default() -> bool:
+    return not on_tpu()
+
+
+def pack_values(values: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """Pack w-bit signed codes (int8 container) 8//w-per-byte along ``axis``."""
+    if bits == 8:
+        return values.astype(jnp.int8)
+    pack = 8 // bits
+    if values.shape[axis] % pack:
+        raise ValueError(f"axis {axis} (len {values.shape[axis]}) not divisible by {pack}")
+    v = jnp.moveaxis(values.astype(jnp.int32), axis, 0)
+    mask = (1 << bits) - 1
+    v = v.reshape(v.shape[0] // pack, pack, *v.shape[1:])
+    byte = jnp.zeros(v.shape[:1] + v.shape[2:], jnp.int32)
+    for i in range(pack):
+        byte = byte | ((v[:, i] & mask) << (i * bits))
+    # int8 container: values >= 128 wrap to negative — intentional.
+    byte = ((byte + 128) % 256 - 128).astype(jnp.int8)
+    return jnp.moveaxis(byte, 0, axis)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def int_matmul(x_q: jax.Array, w_packed: jax.Array, *, bits: int = 8,
+               block=_qg.DEFAULT_BLOCK, interpret: bool | None = None) -> jax.Array:
+    """Raw integer GEMM on the kernel (int8 x packed-w -> int32)."""
+    interp = _interpret_default() if interpret is None else interpret
+    return _qg.quant_gemm(x_q, w_packed, None, bits=bits, block=block,
+                          fuse_dequant=False, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "act_bits", "block", "interpret"))
+def quantized_matmul(x: jax.Array, w_q: Quantized, *, bits: int | None = None,
+                     act_bits: int = 8, block=_qg.DEFAULT_BLOCK,
+                     interpret: bool | None = None) -> jax.Array:
+    """float x (quantized weight) -> float via the packed integer kernel.
+
+    ``w_q.values`` is (K, N) int8 codes with per-channel ``scale`` (1, N) or
+    broadcastable; activations are quantized per-tensor to ``act_bits``.
+    """
+    bits = w_q.bits if bits is None else bits
+    interp = _interpret_default() if interpret is None else interpret
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1])
+    xq = quantize(x2, bits=act_bits, per_channel=False)
+    w_packed = pack_values(w_q.values, bits, axis=0)
+    scales = (w_q.scale.reshape(1, -1) * xq.scale.reshape(1, 1)).astype(jnp.float32)
+    out = _qg.quant_gemm(xq.values, w_packed, scales, bits=bits, block=block,
+                         fuse_dequant=True, interpret=interp)
+    return out.reshape(*orig_shape[:-1], out.shape[-1]).astype(x.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "tile", "interpret"))
+def bit_sparsity_stats(q: jax.Array, *, bits: int, tile: int = 32,
+                       interpret: bool | None = None):
+    """(word_sparsity, bit_sparsity_blockmax) from the reduction kernel."""
+    interp = _interpret_default() if interpret is None else interpret
+    if q.ndim != 2:
+        q = q.reshape(-1, q.shape[-1])
+    m, n = q.shape
+    maxes, zeros = _bs.block_stats(q, tile=tile, interpret=interp)
+    pad_rows = maxes.shape[0] * tile - m
+    pad_cols = maxes.shape[1] * tile - n
+    total_pad = pad_rows * n + pad_cols * m + pad_rows * pad_cols
+    word = (jnp.sum(zeros) - total_pad) / (m * n)
+    bit_blockmax = 1.0 - jnp.mean(maxes.astype(jnp.float32)) / (2 ** (bits - 1))
+    return word.astype(jnp.float32), bit_blockmax.astype(jnp.float32)

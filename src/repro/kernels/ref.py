@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function mirrors one kernel's semantics exactly; tests sweep shapes,
+bit-widths and dtypes asserting bit-identical (integer) or allclose (float)
+agreement with the kernels run under ``interpret=True``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "unpack_values_ref",
+    "quant_gemm_ref",
+    "block_stats_ref",
+    "bit_sparsity_stats_ref",
+]
+
+
+def unpack_values_ref(packed: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """NumPy-style unpack: low bits first along ``axis``."""
+    if bits == 8:
+        return packed
+    pack = 8 // bits
+    arr = jnp.asarray(packed, jnp.int8)
+    out = []
+    for i in range(pack):
+        shift = i * bits
+        v = jnp.left_shift(arr, 8 - bits - shift) >> (8 - bits)
+        out.append(v)
+    stacked = jnp.stack(out, axis=axis + 1)
+    shape = list(arr.shape)
+    shape[axis] *= pack
+    return stacked.reshape(shape)
+
+
+def quant_gemm_ref(x: jax.Array, w_packed: jax.Array,
+                   scales: jax.Array | None = None, *, bits: int = 8,
+                   fuse_dequant: bool = False) -> jax.Array:
+    w = unpack_values_ref(w_packed, bits, axis=0)
+    out = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32),
+                     preferred_element_type=jnp.int32)
+    if fuse_dequant:
+        s = jnp.ones((1, out.shape[1]), jnp.float32) if scales is None else scales
+        return out.astype(jnp.float32) * s.reshape(1, -1)
+    return out
+
+
+def block_stats_ref(q: jax.Array, tile: int = 32):
+    if q.ndim != 2:
+        q = q.reshape(-1, q.shape[-1])
+    m, n = q.shape
+    pm, pn = (-m) % tile, (-n) % tile
+    qp = jnp.pad(q, ((0, pm), (0, pn))).astype(jnp.int32)
+    r, c = qp.shape[0] // tile, qp.shape[1] // tile
+    a = jnp.abs(qp).reshape(r, tile, c, tile)
+    maxes = jnp.max(a, axis=(1, 3))
+    zeros = jnp.sum((qp == 0).astype(jnp.int32).reshape(r, tile, c, tile),
+                    axis=(1, 3))
+    return maxes, zeros
+
+
+def bit_sparsity_stats_ref(q: jax.Array, bits: int, tile: int = 32):
+    """(word_sparsity, bit_sparsity_blockmax) — must equal core.sparsity."""
+    if q.ndim != 2:
+        q = q.reshape(-1, q.shape[-1])
+    m, n = q.shape
+    maxes, zeros = block_stats_ref(q, tile)
+    pad_rows = maxes.shape[0] * tile - m
+    pad_cols = maxes.shape[1] * tile - n
+    total_pad = pad_rows * n + pad_cols * m + pad_rows * pad_cols
+    word = (jnp.sum(zeros) - total_pad) / (m * n)
+    bit_blockmax = 1.0 - jnp.mean(maxes.astype(jnp.float32)) / (2 ** (bits - 1))
+    return word, bit_blockmax

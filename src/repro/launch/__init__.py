@@ -1,0 +1,9 @@
+"""Launch layer: meshes, distributed steps, dry-run, train/serve drivers.
+
+NOTE: ``repro.launch.dryrun`` sets XLA_FLAGS at import — import it only in a
+dedicated dry-run process, never from tests or benchmarks.
+"""
+
+from repro.launch import hlo_stats, mesh, steps
+
+__all__ = ["hlo_stats", "mesh", "steps"]

@@ -1,0 +1,160 @@
+"""HLO analysis: collective-byte extraction + roofline terms from compiled
+artifacts (the CPU-only container's substitute for a real profile).
+
+``collective_bytes`` parses the (SPMD-partitioned, per-device) HLO text and
+sums a per-chip wire-byte model over every collective:
+
+    all-reduce        : 2 x |operand|   (ring: reduce-scatter + all-gather)
+    all-gather        : 1 x |result|    (each chip receives ~the full result)
+    reduce-scatter    : 1 x |operand|
+    all-to-all        : 1 x |operand|
+    collective-permute: 1 x |operand|
+
+Shapes in partitioned HLO are already per-device.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+
+__all__ = ["collective_bytes", "CollectiveStats", "RooflineTerms", "roofline",
+           "HW"]
+
+# TPU v5e-class hardware constants (per chip) — see assignment.
+HW = dict(peak_flops=197e12, hbm_bw=819e9, ici_bw=50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  %all-reduce.5 = bf16[16,128]{1,0} all-reduce(%x), ...
+#       ROOT %r = (f32[2,4], f32[]) tuple(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"[\w\-]+)\(", re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+           "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_text: str) -> int:
+    """Total bytes of all array shapes appearing in ``shape_text``."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: float
+    by_op: dict[str, float]
+    counts: dict[str, int]
+
+
+def collective_bytes(hlo_text: str) -> CollectiveStats:
+    """Parse HLO text; wire-byte model per chip (see module docstring)."""
+    # First pass: result shapes for every named instruction.
+    result_shape: dict[str, str] = {}
+    op_of: dict[str, str] = {}
+    for m in _INSTR_RE.finditer(hlo_text):
+        name, shape_text, opcode = m.groups()
+        result_shape[name] = shape_text
+        op_of[name] = opcode
+
+    by_op: dict[str, float] = {c: 0.0 for c in COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        name, shape_text, opcode = m.groups()
+        if opcode not in COLLECTIVES:
+            continue
+        counts[opcode] += 1
+        # operand bytes: the instruction's operand list references %names
+        line_start = m.start()
+        line_end = hlo_text.find("\n", line_start)
+        line = hlo_text[line_start:line_end]
+        args = line.split("(", 1)[1] if "(" in line else ""
+        operand_names = re.findall(r"%([\w.\-]+)", args)
+        op_bytes = sum(_shape_bytes(result_shape.get(o, "")) for o in operand_names)
+        # fall back to inline shapes in the operand list, then to the result
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(args)
+        if op_bytes == 0:
+            op_bytes = _shape_bytes(shape_text)
+        if opcode == "all-gather":
+            op_bytes = _shape_bytes(shape_text)      # result bytes
+        by_op[opcode] += _FACTOR[opcode] * op_bytes
+    total = float(sum(by_op.values()))
+    return CollectiveStats(total_bytes=total, by_op=by_op, counts=counts)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three roofline terms (seconds) for one (arch, shape, mesh) cell."""
+
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_bytes: float           # per device
+    chips: int
+    model_flops: float = 0.0    # 6·N·D (or 6·N_active·D) for the whole step
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """Optimistic (max-overlap) step time estimate."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips) — remat/redundancy waste."""
+        if self.hlo_flops <= 0:
+            return 0.0
+        return self.model_flops / (self.hlo_flops * self.chips)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-model-FLOPs throughput / peak, at the estimated step time."""
+        if self.step_time_s <= 0:
+            return 0.0
+        return (self.model_flops / self.step_time_s) / (
+            self.chips * HW["peak_flops"])
+
+
+def roofline(cost_analysis: dict, coll: CollectiveStats, chips: int,
+             model_flops: float = 0.0) -> RooflineTerms:
+    """Terms from ``compiled.cost_analysis()`` + parsed collective bytes.
+
+    cost_analysis flops/bytes are per-device (the HLO module is the per-device
+    program after SPMD partitioning).
+    """
+    flops = float(cost_analysis.get("flops", 0.0))
+    byts = float(cost_analysis.get("bytes accessed", 0.0))
+    return RooflineTerms(
+        compute_s=flops / HW["peak_flops"],
+        memory_s=byts / HW["hbm_bw"],
+        collective_s=coll.total_bytes / HW["ici_bw"],
+        hlo_flops=flops, hlo_bytes=byts, coll_bytes=coll.total_bytes,
+        chips=chips, model_flops=model_flops)

@@ -1,0 +1,230 @@
+"""Jitted distributed steps: train_step, prefill, decode (serve_step).
+
+Builds in/out shardings from the model's logical-axis ParamDefs, donates
+state buffers, and exposes ``input_specs`` — ShapeDtypeStruct stand-ins for
+every (arch x shape) dry-run cell (weak-type-correct, shardable, no device
+allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES
+from repro.models import model as model_lib
+from repro.models.common import (logical_to_pspec, rule_overrides, rules_for,
+                                 shardable_batch_axes)
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, OptState, adamw_init, adamw_update
+
+__all__ = [
+    "TrainState", "input_specs", "batch_pspecs",
+    "make_train_step", "make_prefill_step", "make_decode_step",
+    "train_state_pspecs", "init_train_state", "named", "cache_input_specs",
+]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class TrainState:
+    params: dict
+    opt: OptState
+    step: jax.Array
+
+    def tree_flatten(self):
+        return (self.params, self.opt, self.step), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+# ---------------------------------------------------------------------------
+# Sharding trees
+# ---------------------------------------------------------------------------
+
+def named(mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def train_state_pspecs(cfg: ModelConfig, mesh):
+    pspec = model_lib.param_pspecs(cfg, mesh)
+    return TrainState(
+        params=pspec,
+        opt=OptState(step=P(), m=pspec, v=pspec, ef=None),
+        step=P())
+
+
+def batch_pspecs(cfg: ModelConfig, mesh, with_embeds: bool | None = None,
+                 batch_size: int | None = None):
+    rules = rules_for(cfg)
+    if batch_size is not None:
+        rules["batch"] = shardable_batch_axes(mesh, batch_size,
+                                              candidates=rules["batch"])
+    axes = tuple(mesh.axis_names)
+    bspec = logical_to_pspec(("batch", "seq"), rules, axes)
+    out = {"tokens": bspec, "targets": bspec}
+    stub = cfg.frontend_stub if with_embeds is None else with_embeds
+    if stub:
+        out["embeds"] = logical_to_pspec(("batch", "seq", None), rules, axes)
+        del out["tokens"]
+    return out
+
+
+def _batch_rules(cfg: ModelConfig, mesh, batch_size: int | None):
+    """Effective rules + the override kwargs for in-model shard() calls.
+
+    The overrides carry every rule that differs from DEFAULT_RULES (fsdp /
+    dp_over_model archs) plus the batch axes adjusted for divisibility, so
+    in-model ``shard()`` constraints agree with the jit in/out shardings.
+    """
+    from repro.models.common import DEFAULT_RULES
+    rules = rules_for(cfg)
+    if batch_size is not None:
+        rules["batch"] = shardable_batch_axes(mesh, batch_size,
+                                              candidates=rules["batch"])
+    overrides = {k: v for k, v in rules.items() if DEFAULT_RULES.get(k) != v}
+    return rules, overrides
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins for the dry-run)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str) -> dict:
+    """Abstract inputs for one dry-run cell.
+
+    train   : {"tokens"|"embeds", "targets"}
+    prefill : {"tokens"|"embeds"} (+ caches built via cache_input_specs)
+    decode  : {"tokens" (B,1), "cache_pos" scalar} (+ caches)
+    """
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    step = sh["step"]
+    i32 = jnp.int32
+    if step == "train":
+        if cfg.frontend_stub:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16),
+                    "targets": jax.ShapeDtypeStruct((b, s), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+                "targets": jax.ShapeDtypeStruct((b, s), i32)}
+    if step == "prefill":
+        if cfg.frontend_stub:
+            return {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a seq_len cache
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "cache_pos": jax.ShapeDtypeStruct((), i32)}
+
+
+def cache_input_specs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """ShapeDtypeStruct tree for the caches (no allocation)."""
+    shaped = jax.eval_shape(
+        lambda: model_lib.init_caches(cfg, batch, max_len, dtype=jnp.bfloat16))
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), shaped)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def init_train_state(cfg: ModelConfig, opt_cfg: AdamWConfig, key) -> TrainState:
+    params = model_lib.init_params(cfg, key)
+    return TrainState(params=params, opt=adamw_init(params, opt_cfg),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, mesh, opt_cfg: AdamWConfig,
+                    lr_schedule=None, donate: bool = True,
+                    batch_size: int | None = None):
+    """Returns jitted (state, batch) -> (state, metrics)."""
+    if lr_schedule is None:
+        lr_schedule = lambda step: jnp.float32(opt_cfg.lr)
+    _, overrides = _batch_rules(cfg, mesh, batch_size)
+
+    def step_fn(state: TrainState, batch: dict):
+        with rule_overrides(**overrides):
+            def loss_of(params):
+                return model_lib.loss_fn(
+                    params, cfg, batch.get("tokens"), batch["targets"],
+                    embeds=batch.get("embeds"))
+
+            (loss, parts), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(state.params)
+            lr = lr_schedule(state.step)
+            new_params, new_opt, om = adamw_update(grads, state.opt,
+                                                   state.params, opt_cfg, lr)
+            metrics = {"loss": loss, "nll": parts["nll"], "aux": parts["aux"],
+                       "lr": lr, **om}
+            return TrainState(params=new_params, opt=new_opt,
+                              step=state.step + 1), metrics
+
+    st_specs = train_state_pspecs(cfg, mesh)
+    if opt_cfg.compress_grads:
+        st_specs = TrainState(params=st_specs.params,
+                              opt=OptState(step=P(), m=st_specs.params,
+                                           v=st_specs.params, ef=st_specs.params),
+                              step=P())
+    b_specs = batch_pspecs(cfg, mesh, batch_size=batch_size)
+    return jax.jit(
+        step_fn,
+        in_shardings=(named(mesh, st_specs), named(mesh, b_specs)),
+        out_shardings=(named(mesh, st_specs), None),
+        donate_argnums=(0,) if donate else ())
+
+
+def make_prefill_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
+                      max_len: int | None = None):
+    """(params, inputs, caches) -> (logits, caches)."""
+    rules, overrides = _batch_rules(cfg, mesh, batch_size)
+
+    def step_fn(params, inputs, caches):
+        with rule_overrides(**overrides):
+            return model_lib.prefill(params, cfg, inputs.get("tokens"),
+                                     caches=caches, embeds=inputs.get("embeds"))
+
+    p_specs = model_lib.param_pspecs(cfg, mesh, phase="inference")
+    c_specs = model_lib.cache_pspecs(cfg, mesh, batch=batch_size or 0,
+                                     max_len=max_len or 0)
+    in_specs = batch_pspecs(cfg, mesh, batch_size=batch_size)
+    in_specs.pop("targets", None)
+    axes = tuple(mesh.axis_names)
+    logits_spec = logical_to_pspec(("batch", "seq", "vocab"), rules, axes)
+    return jax.jit(
+        step_fn,
+        in_shardings=(named(mesh, p_specs), named(mesh, in_specs),
+                      named(mesh, c_specs)),
+        out_shardings=(named(mesh, logits_spec), named(mesh, c_specs)),
+        donate_argnums=(2,))
+
+
+def make_decode_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
+                     max_len: int | None = None):
+    """(params, tokens (B,1), caches, cache_pos) -> (logits, caches)."""
+    rules, overrides = _batch_rules(cfg, mesh, batch_size)
+
+    def step_fn(params, tokens, caches, cache_pos):
+        with rule_overrides(**overrides):
+            return model_lib.decode_step(params, cfg, tokens, caches=caches,
+                                         cache_pos=cache_pos)
+
+    p_specs = model_lib.param_pspecs(cfg, mesh, phase="inference")
+    c_specs = model_lib.cache_pspecs(cfg, mesh, batch=batch_size or 0,
+                                     max_len=max_len or 0)
+    axes = tuple(mesh.axis_names)
+    tok_spec = logical_to_pspec(("batch", None), rules, axes)
+    logits_spec = logical_to_pspec(("batch", None, "vocab"), rules, axes)
+    return jax.jit(
+        step_fn,
+        in_shardings=(named(mesh, p_specs), named(mesh, tok_spec),
+                      named(mesh, c_specs), None),
+        out_shardings=(named(mesh, logits_spec), named(mesh, c_specs)),
+        donate_argnums=(2,))

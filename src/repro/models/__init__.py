@@ -1,0 +1,19 @@
+"""Model substrate: layers, blocks, architectures.
+
+- config     : ModelConfig (dense / moe / ssm / hybrid / audio / vlm)
+- common     : ParamDef system, sharding helper, dense/norm/embedding
+- attention  : GQA + MLA, blockwise (flash-style) + cached decode
+- mlp / moe  : gated MLPs; expert-parallel MoE (psum + a2a variants)
+- ssm / rwkv : Mamba2 SSD and RWKV6 chunked kernels + blocks
+- blocks     : per-family block assembly, scan-over-layers
+- model      : end-to-end LM (forward / prefill / decode_step / loss)
+"""
+
+from repro.models import attention, blocks, common, config, mlp, model, moe, rope, rwkv, ssm
+from repro.models.config import MLAConfig, ModelConfig, MoEConfig, RWKVConfig, SSMConfig
+
+__all__ = [
+    "attention", "blocks", "common", "config", "mlp", "model", "moe",
+    "rope", "rwkv", "ssm",
+    "MLAConfig", "ModelConfig", "MoEConfig", "RWKVConfig", "SSMConfig",
+]

@@ -1,0 +1,261 @@
+"""Layer blocks and scan-over-layers stacking for every architecture family.
+
+Families:
+  dense / moe / audio / vlm : pre-norm attention + (MLP | MoE) blocks, scanned
+  ssm (cfg.ssm set)         : Mamba2 blocks, scanned
+  ssm (cfg.rwkv set)        : RWKV6 blocks, scanned
+  hybrid                    : Mamba2 backbone with a *shared* attention+MLP
+                              block applied every ``hybrid_attn_every`` layers
+                              (Zamba2-style); grouped scan so the shared block
+                              lowers exactly once per application site.
+
+All per-layer parameters are stacked with a leading ``layers`` axis and
+consumed via ``lax.scan`` — keeping HLO size (and CPU dry-run compile time)
+independent of depth.  ``jax.checkpoint`` wraps the body when cfg.remat.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention as attn_lib
+from repro.models import moe as moe_lib
+from repro.models import rwkv as rwkv_lib
+from repro.models import ssm as ssm_lib
+from repro.models.common import ParamDef, rmsnorm, shard
+from repro.models.config import ModelConfig
+from repro.models.mlp import mlp_defs, mlp_fwd
+
+__all__ = [
+    "layer_defs", "stacked_layer_defs", "shared_attn_defs",
+    "stack_fwd", "init_layer_caches", "hybrid_counts",
+]
+
+
+# ---------------------------------------------------------------------------
+# Definitions
+# ---------------------------------------------------------------------------
+
+def layer_defs(cfg: ModelConfig) -> dict:
+    """ParamDefs for ONE layer of the given family."""
+    if cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.ssm is not None):
+        return {"ln": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+                "ssm": ssm_lib.ssm_defs(cfg)}
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return rwkv_lib.rwkv_defs(cfg)
+    # attention transformer
+    defs = {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_lib.attention_defs(cfg),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+    }
+    if cfg.is_moe:
+        defs["moe"] = moe_lib.moe_defs(cfg)
+    else:
+        defs["mlp"] = mlp_defs(cfg)
+    return defs
+
+
+def shared_attn_defs(cfg: ModelConfig) -> dict:
+    """Zamba2 shared attention+MLP block (one copy, applied at many sites)."""
+    return {
+        "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "attn": attn_lib.gqa_defs(cfg),
+        "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        "mlp": mlp_defs(cfg),
+    }
+
+
+def _stack_def(d: ParamDef, n: int) -> ParamDef:
+    return dataclasses.replace(
+        d, shape=(n, *d.shape), logical=("layers", *d.logical),
+        fan_in_axes=tuple(a + 1 for a in d.fan_in_axes))
+
+
+def stacked_layer_defs(cfg: ModelConfig, n: int | None = None) -> dict:
+    n = cfg.num_layers if n is None else n
+    return jax.tree_util.tree_map(
+        lambda d: _stack_def(d, n), layer_defs(cfg),
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def hybrid_counts(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, remainder) for the hybrid grouped scan."""
+    every = cfg.hybrid_attn_every
+    return cfg.num_layers // every, every, cfg.num_layers % every
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _transformer_block(layer_params, x, cfg: ModelConfig, *, positions,
+                       cache, cache_pos, kv_valid_len):
+    h = rmsnorm(layer_params["ln1"], x, cfg.rms_eps)
+    attn_out, new_cache = attn_lib.attention_fwd(
+        layer_params["attn"], h, cfg, positions=positions, cache=cache,
+        cache_pos=cache_pos, kv_valid_len=kv_valid_len)
+    x = x + attn_out
+    h = rmsnorm(layer_params["ln2"], x, cfg.rms_eps)
+    if cfg.is_moe:
+        out, aux = moe_lib.moe_fwd(layer_params["moe"], h, cfg)
+    else:
+        out, aux = mlp_fwd(layer_params["mlp"], h, cfg), jnp.float32(0.0)
+    return x + out, new_cache, aux
+
+
+def _mamba_block(layer_params, x, cfg: ModelConfig, *, cache):
+    h = rmsnorm(layer_params["ln"], x, cfg.rms_eps)
+    out, new_cache = ssm_lib.ssm_fwd(layer_params["ssm"], h, cfg, cache=cache)
+    return x + out, new_cache
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat:
+        return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+    return fn
+
+
+def stack_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
+              positions, caches: dict | None = None, cache_pos=0,
+              kv_valid_len=None):
+    """Run the full layer stack.  Returns (x, new_caches, aux_loss).
+
+    ``params`` holds "layers" (stacked) and, for hybrid, "shared" +
+    "layers_tail".  ``caches`` mirrors that structure with stacked caches.
+    """
+    if cfg.family == "hybrid":
+        return _hybrid_fwd(params, x, cfg, positions=positions, caches=caches,
+                           cache_pos=cache_pos, kv_valid_len=kv_valid_len)
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        def body(carry, xs):
+            xc = carry
+            lp, lc = xs
+            out, nc = rwkv_lib.rwkv_block_fwd(lp, xc, cfg, cache=lc)
+            return out, nc
+        body = _maybe_remat(body, cfg)
+        lc = caches["rwkv"] if caches is not None else None
+        x, new = _scan_layers(body, x, params["layers"], lc)
+        return x, ({"rwkv": new} if caches is not None else None), jnp.float32(0.0)
+
+    if cfg.family == "ssm":
+        def body(carry, xs):
+            xc = carry
+            lp, lc = xs
+            out, nc = _mamba_block(lp, xc, cfg, cache=lc)
+            return out, nc
+        body = _maybe_remat(body, cfg)
+        lc = caches["ssm"] if caches is not None else None
+        x, new = _scan_layers(body, x, params["layers"], lc)
+        return x, ({"ssm": new} if caches is not None else None), jnp.float32(0.0)
+
+    # attention transformer (dense / moe / audio / vlm)
+    def body(carry, xs):
+        xc, aux = carry
+        lp, lc = xs
+        out, nc, a = _transformer_block(lp, xc, cfg, positions=positions,
+                                        cache=lc, cache_pos=cache_pos,
+                                        kv_valid_len=kv_valid_len)
+        return (out, aux + a), nc
+    body = _maybe_remat(body, cfg)
+    lc = caches["attn"] if caches is not None else None
+    (x, aux), new = _scan_layers(body, (x, jnp.float32(0.0)), params["layers"], lc)
+    return x, ({"attn": new} if caches is not None else None), aux
+
+
+def _scan_layers(body, carry0, stacked_params, stacked_caches):
+    if stacked_caches is None:
+        carry, _ = lax.scan(lambda c, p: (body(c, (p, None))[0], None),
+                            carry0, stacked_params)
+        return carry, None
+    return lax.scan(body, carry0, (stacked_params, stacked_caches))
+
+
+def _hybrid_fwd(params, x, cfg, *, positions, caches, cache_pos, kv_valid_len):
+    """Grouped scan: [group_size mamba layers + shared attn] x n_groups + tail."""
+    n_groups, gsize, rem = hybrid_counts(cfg)
+    shared = params["shared"]
+    has_cache = caches is not None
+
+    def mamba_body(xc, xs):
+        lp, lc = xs
+        out, nc = _mamba_block(lp, xc, cfg, cache=lc)
+        return out, nc
+    mamba_body = _maybe_remat(mamba_body, cfg)
+
+    def group_body(xc, xs):
+        grp_params, grp_cache, attn_cache = xs
+        if has_cache:
+            xc, new_ssm = lax.scan(mamba_body, xc, (grp_params, grp_cache))
+        else:
+            xc, new_ssm = _scan_layers(mamba_body, xc, grp_params, None)
+        h = rmsnorm(shared["ln1"], xc, cfg.rms_eps)
+        attn_out, new_attn = attn_lib.attention_fwd(
+            shared["attn"], h, cfg, positions=positions, cache=attn_cache,
+            cache_pos=cache_pos, kv_valid_len=kv_valid_len)
+        xc = xc + attn_out
+        h = rmsnorm(shared["ln2"], xc, cfg.rms_eps)
+        xc = xc + mlp_fwd(shared["mlp"], h, cfg)
+        return xc, (new_ssm, new_attn)
+
+    # reshape stacked (L, ...) params into (n_groups, gsize, ...)
+    main = jax.tree_util.tree_map(
+        lambda a: a[: n_groups * gsize].reshape(n_groups, gsize, *a.shape[1:]),
+        params["layers"])
+    tail = jax.tree_util.tree_map(lambda a: a[n_groups * gsize:], params["layers"])
+
+    if has_cache:
+        ssm_c = jax.tree_util.tree_map(
+            lambda a: a[: n_groups * gsize].reshape(n_groups, gsize, *a.shape[1:]),
+            caches["ssm"])
+        ssm_tail_c = jax.tree_util.tree_map(lambda a: a[n_groups * gsize:],
+                                            caches["ssm"])
+        attn_c = caches["attn"]
+        x, (new_ssm_g, new_attn) = lax.scan(group_body, x, (main, ssm_c, attn_c))
+        x, new_tail = lax.scan(mamba_body, x, (tail, ssm_tail_c)) if rem else (x, None)
+        new_ssm = jax.tree_util.tree_map(
+            lambda g: g.reshape(-1, *g.shape[2:]), new_ssm_g)
+        if rem:
+            new_ssm = jax.tree_util.tree_map(
+                lambda g, t: jnp.concatenate([g, t], axis=0), new_ssm, new_tail)
+        return x, {"ssm": new_ssm, "attn": new_attn}, jnp.float32(0.0)
+
+    x, _ = lax.scan(lambda c, p: (group_body(c, (p, None, None))[0], None), x, main)
+    if rem:
+        x = lax.scan(lambda c, p: (mamba_body(c, (p, None))[0], None), x, tail)[0]
+    return x, None, jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Caches
+# ---------------------------------------------------------------------------
+
+def init_layer_caches(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16) -> dict:
+    """Stacked caches matching stack_fwd's expectations."""
+    def stack(make_one, n):
+        one = make_one()
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n, *a.shape)).copy(), one)
+
+    if cfg.family == "hybrid":
+        n_groups, _, _ = hybrid_counts(cfg)
+        return {
+            "ssm": stack(lambda: ssm_lib.init_ssm_cache(cfg, batch, dtype),
+                         cfg.num_layers),
+            "attn": stack(lambda: attn_lib.init_kv_cache(cfg, batch, max_len, dtype),
+                          n_groups),
+        }
+    if cfg.family == "ssm" and cfg.rwkv is not None:
+        return {"rwkv": stack(lambda: rwkv_lib.init_rwkv_cache(cfg, batch, dtype),
+                              cfg.num_layers)}
+    if cfg.family == "ssm":
+        return {"ssm": stack(lambda: ssm_lib.init_ssm_cache(cfg, batch, dtype),
+                             cfg.num_layers)}
+    return {"attn": stack(lambda: attn_lib.init_kv_cache(cfg, batch, max_len, dtype),
+                          cfg.num_layers)}

@@ -1,0 +1,314 @@
+"""Shared modeling primitives: sharding helper, param definitions, dense
+layers (with optional unary-backend quantized execution), norms, embeddings.
+
+Parameters are plain pytrees (dicts of arrays).  Every parameter is declared
+through a ``ParamDef`` carrying its *logical axes*; one walk materializes
+init values, another produces `PartitionSpec`s for pjit — keeping init and
+sharding definitions in one place (MaxText-style logical axis rules).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.quantization import Quantized, quantize
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "ParamDef", "init_tree", "pspec_tree", "DEFAULT_RULES",
+    "shard", "dense", "rmsnorm", "RMS_SCALE_INIT",
+    "embed_lookup", "logits_from_embedding", "dtype_of",
+]
+
+# ---------------------------------------------------------------------------
+# Logical axis rules
+# ---------------------------------------------------------------------------
+
+# logical axis name -> mesh axis (or tuple) — the single source of sharding
+# truth.  The distribution layer can override (e.g. add "pod" to batch).
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": "model",        # decode-time KV cache sequence sharding
+    "embed": None,
+    "fsdp_embed": "data",     # embed axis when cfg.fsdp is on
+    "heads": "model",
+    "qkv": None,
+    "kv_heads": None,          # kv heads usually < model-axis size: replicate
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_mlp": None,
+    "layers": None,
+    "conv": None,
+    "state": None,
+    "lora": None,
+}
+
+
+def rules_for(cfg: ModelConfig) -> dict[str, object]:
+    rules = dict(DEFAULT_RULES)
+    if cfg.fsdp:
+        rules["embed"] = "data"
+    if cfg.dp_over_model:
+        # archs whose heads don't divide the model axis (rwkv6: 40 heads,
+        # musicgen: 24) run pure data parallelism across the WHOLE mesh
+        # (batch also sharded over 'model') with FSDP for weight memory —
+        # no tensor parallelism, no redundant compute.  'pod' is LAST so the
+        # divisibility filter spends the global batch on data x model first
+        # (batch 256 = 16 x 16 exactly; on the 512-chip mesh the pod axis
+        # replicates rather than idling the model axis).
+        rules["batch"] = ("data", "model", "pod")
+        rules["heads"] = None
+        rules["mlp"] = None
+        rules["vocab"] = None
+    return rules
+
+
+# Thread-local logical-rule overrides (e.g. batch=() when the global batch is
+# too small to shard over the data axes — long_500k has batch 1).  Entered by
+# the step factories during tracing so in-model shard() calls agree with the
+# jit in_shardings.
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def rule_overrides(**kw):
+    prev = getattr(_TLS, "overrides", {})
+    _TLS.overrides = {**prev, **kw}
+    try:
+        yield
+    finally:
+        _TLS.overrides = prev
+
+
+def _active_overrides() -> dict:
+    return getattr(_TLS, "overrides", {})
+
+
+def shardable_batch_axes(mesh, batch_size: int,
+                         candidates=("pod", "data")) -> tuple[str, ...]:
+    """Longest prefix of batch axes whose product divides batch_size."""
+    if isinstance(candidates, str):
+        candidates = (candidates,)
+    keep: list[str] = []
+    prod = 1
+    for a in candidates or ():
+        if a in mesh.axis_names and batch_size % (prod * mesh.shape[a]) == 0:
+            keep.append(a)
+            prod *= mesh.shape[a]
+    return tuple(keep)
+
+
+def _mesh_axes_present() -> tuple[str, ...]:
+    env = jax.interpreters.pxla.thread_resources.env
+    mesh = env.physical_mesh
+    return () if mesh.empty else tuple(mesh.axis_names)
+
+
+def logical_to_pspec(logical: tuple[str | None, ...],
+                     rules: dict[str, object],
+                     mesh_axes: tuple[str, ...],
+                     shape: tuple[int, ...] | None = None,
+                     mesh_shape: dict[str, int] | None = None) -> P:
+    """Map logical axis names to a PartitionSpec.
+
+    When ``shape`` + ``mesh_shape`` are provided, mesh axes whose size does
+    not divide the corresponding dim are dropped (e.g. 40 RWKV heads or 24
+    musicgen heads on a 16-way model axis fall back to replication; batch=1
+    long_500k cells fall back to unsharded batch).
+    """
+    rules = {**rules, **_active_overrides()}
+    spec = []
+    used: set[str] = set()
+    for i, name in enumerate(logical):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            spec.append(None)
+            continue
+        axes = tuple(a for a in (axis if isinstance(axis, (tuple, list))
+                                 else (axis,))
+                     if a in mesh_axes and a not in used)
+        if shape is not None and mesh_shape is not None:
+            kept = []
+            prod = 1
+            for a in axes:
+                if shape[i] % (prod * mesh_shape[a]) == 0:
+                    kept.append(a)
+                    prod *= mesh_shape[a]
+            axes = tuple(kept)
+        used.update(axes)
+        if not axes:
+            spec.append(None)
+        elif len(axes) == 1:
+            spec.append(axes[0])
+        else:
+            spec.append(axes)
+    return P(*spec)
+
+
+def shard(x: jax.Array, *logical: str | None,
+          rules: dict[str, object] | None = None) -> jax.Array:
+    """Constrain ``x``'s sharding by logical axis names (no-op without mesh)."""
+    env = jax.interpreters.pxla.thread_resources.env
+    mesh = env.physical_mesh
+    if mesh.empty or not mesh.axis_names:
+        return x
+    rules = DEFAULT_RULES if rules is None else rules
+    spec = logical_to_pspec(tuple(logical), rules, tuple(mesh.axis_names),
+                            shape=tuple(x.shape),
+                            mesh_shape=dict(mesh.shape))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Parameter definitions
+# ---------------------------------------------------------------------------
+
+RMS_SCALE_INIT = "ones"
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "lecun"           # lecun | zeros | ones | normal(σ=0.02) | ssm_a | ssm_dt
+    fan_in_axes: tuple[int, ...] = (0,)
+
+    def materialize(self, key: jax.Array, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "normal":
+            return (0.02 * jax.random.normal(key, self.shape)).astype(dtype)
+        if self.init == "ssm_a":
+            # A_log init: log of [1, 16] range over heads (Mamba2 convention);
+            # broadcast across any leading (stacked-layer) axes.
+            base = jnp.log(jnp.linspace(1.0, 16.0, self.shape[-1]))
+            return jnp.broadcast_to(base, self.shape).astype(dtype)
+        if self.init == "ssm_dt":
+            # dt bias ~ softplus-inv of log-uniform dt in [1e-3, 1e-1]
+            u = jax.random.uniform(key, self.shape)
+            dt = jnp.exp(u * (math.log(0.1) - math.log(0.001)) + math.log(0.001))
+            return jnp.log(jnp.expm1(dt)).astype(dtype)
+        fan_in = 1
+        for a in self.fan_in_axes:
+            fan_in *= self.shape[a]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+        return (scale * jax.random.normal(key, self.shape)).astype(dtype)
+
+
+def init_tree(defs, key: jax.Array, dtype) -> dict:
+    """Materialize a (nested dict) tree of ParamDefs with split keys."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    vals = [d.materialize(k, dtype) for d, k in zip(leaves, keys)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def pspec_tree(defs, rules: dict[str, object], mesh_axes: tuple[str, ...],
+               mesh_shape: dict[str, int] | None = None):
+    return jax.tree_util.tree_map(
+        lambda d: logical_to_pspec(d.logical, rules, mesh_axes,
+                                   shape=d.shape, mesh_shape=mesh_shape),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Layers
+# ---------------------------------------------------------------------------
+
+def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
+          out_logical: tuple[str | None, ...] | None = None) -> jax.Array:
+    """x @ w with optional unary-backend quantized execution.
+
+    When ``cfg.quant_kernel`` is set the matmul runs through the Pallas
+    packed-integer kernel (the paper's PE array stand-in).  tuGEMM/tubGEMM/
+    bGEMM are numerically identical (deterministic integer GEMM); uGEMM adds
+    its stochastic multiplier error via the LUT path.
+    """
+    if cfg is not None and cfg.quant_bits is not None and cfg.quant_kernel:
+        from repro.kernels import ops as kops
+        w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
+        wq = quantize(w2.astype(jnp.float32), bits=cfg.quant_bits)
+        if cfg.quant_backend == "ugemm":
+            from repro.core import gemm_sims
+            xq = quantize(x.reshape(-1, x.shape[-1]).astype(jnp.float32),
+                          bits=cfg.quant_bits, per_channel=False)
+            out = gemm_sims.ugemm_exact(xq.values, wq.values, bits=cfg.quant_bits)
+            out = (out * xq.scale * wq.scale.reshape(1, -1)).astype(x.dtype)
+        else:
+            out = kops.quantized_matmul(x, wq, act_bits=min(cfg.quant_bits * 2, 8))
+        return out.reshape(*x.shape[:-1], *w.shape[1:])
+    return _plain_matmul(x, w)
+
+
+def _plain_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    wshape = w.shape
+    w2 = w.reshape(wshape[0], -1)
+    y = jnp.matmul(x, w2.astype(x.dtype))
+    return y.reshape(*x.shape[:-1], *wshape[1:])
+
+
+@jax.custom_vjp
+def bf16_grad(x: jax.Array) -> jax.Array:
+    """Identity whose cotangent is rounded through bf16.
+
+    Placed at block boundaries so the backward tensor-parallel all-reduces of
+    activation gradients run at bf16 instead of f32 (the f32 comes from the
+    norm layers' f32 internals) — halves the dominant collective term of
+    TP-heavy training cells (§Perf pair 2).  Gradient noise added: one bf16
+    rounding per block boundary, far below optimizer noise floor.
+    """
+    return x
+
+
+def _bf16_grad_fwd(x):
+    return x, None
+
+
+def _bf16_grad_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+bf16_grad.defvjp(_bf16_grad_fwd, _bf16_grad_bwd)
+
+
+def rmsnorm(scale: jax.Array, x: jax.Array, eps: float = 1e-5,
+            gemma_style: bool = False) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = scale.astype(jnp.float32)
+    y = y * (1.0 + s) if gemma_style else y * s
+    return y.astype(dt)
+
+
+def embed_lookup(table: jax.Array, ids: jax.Array, compute_dtype) -> jax.Array:
+    return jnp.take(table, ids, axis=0).astype(compute_dtype)
+
+
+def logits_from_embedding(table: jax.Array, x: jax.Array,
+                          softcap: float | None = None) -> jax.Array:
+    logits = jnp.matmul(x, jnp.swapaxes(table.astype(x.dtype), 0, 1))
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

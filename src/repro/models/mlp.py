@@ -1,0 +1,44 @@
+"""Gated MLPs (SwiGLU / GeGLU / GELU) with tensor-parallel sharding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ParamDef, dense, shard
+from repro.models.config import ModelConfig
+
+__all__ = ["mlp_defs", "mlp_fwd"]
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d = cfg.d_model
+    ff = cfg.d_ff if d_ff is None else d_ff
+    defs = {
+        "w_up": ParamDef((d, ff), ("embed", "mlp")),
+        "w_down": ParamDef((ff, d), ("mlp", "embed")),
+    }
+    if cfg.activation in ("swiglu", "geglu"):
+        defs["w_gate"] = ParamDef((d, ff), ("embed", "mlp"))
+    return defs
+
+
+def _act(cfg: ModelConfig, g: jax.Array) -> jax.Array:
+    if cfg.activation == "swiglu":
+        return jax.nn.silu(g)
+    if cfg.activation == "geglu":
+        return jax.nn.gelu(g, approximate=True)
+    return jax.nn.gelu(g, approximate=True)
+
+
+def mlp_fwd(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    up = dense(params["w_up"], x, cfg)
+    up = shard(up, "batch", None, "mlp")
+    if "w_gate" in params:
+        gate = dense(params["w_gate"], x, cfg)
+        gate = shard(gate, "batch", None, "mlp")
+        h = _act(cfg, gate) * up
+    else:
+        h = _act(cfg, up)
+    out = dense(params["w_down"], h, cfg)
+    return shard(out, "batch", None, None)

@@ -1,0 +1,28 @@
+"""Rotary position embeddings (shared by all attention archs)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rope_freqs", "apply_rope"]
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for the even half of the head dimension."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, D) rotated by ``positions`` (..., S) or (S,)."""
+    d = x.shape[-1]
+    inv = rope_freqs(d, theta)                        # (d/2,)
+    pos = positions.astype(jnp.float32)
+    angles = pos[..., None] * inv                      # (..., S, d/2)
+    # broadcast over the heads axis: (..., S, 1, d/2)
+    angles = angles[..., None, :]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

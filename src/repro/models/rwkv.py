@@ -1,0 +1,263 @@
+"""RWKV6 ("Finch") blocks: data-dependent decay WKV, chunked for matmuls.
+
+Time-mix recurrence per head (K = V = head_dim):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ,   w_t = exp(-exp(w0 + LoRA(x_t)))
+
+evaluated chunkwise: within a chunk the pairwise weights
+``exp(Lc_{t-1} - Lc_j)`` (cumulative log-decay differences, always ≤ 0)
+factor into query/key exponentials, giving (Q, Q) score matmuls; across
+chunks a short scan carries the (B, H, K, V) state.  Exponents are clamped to
+±``EXP_CLAMP`` — pairs whose true weight is below e^-2·clamp are numerically
+zero anyway (validated against the recurrent oracle in tests).
+
+Decode is O(1): state + one-token shift buffers, which is what makes the
+``long_500k`` shape runnable for this attention-free arch.
+
+Simplifications vs. the released checkpoints (noted in DESIGN.md): token-shift
+mixing coefficients are static (the decay LoRA — the defining Finch feature —
+*is* data-dependent); LayerNorm is used in both sub-blocks as in the paper.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.common import ParamDef, dense, shard
+from repro.models.config import ModelConfig
+
+__all__ = ["rwkv_defs", "rwkv_block_fwd", "init_rwkv_cache",
+           "wkv_chunked", "wkv_recurrent_ref"]
+
+EXP_CLAMP = 20.0
+CHUNK = 32
+
+
+def _dims(cfg: ModelConfig):
+    k = cfg.rwkv.head_dim
+    h = cfg.d_model // k
+    return h, k
+
+
+def rwkv_defs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, k = _dims(cfg)
+    r = cfg.rwkv.decay_lora
+    return {
+        "ln1_s": ParamDef((d,), ("embed",), init="ones"),
+        "ln1_b": ParamDef((d,), ("embed",), init="zeros"),
+        "ln2_s": ParamDef((d,), ("embed",), init="ones"),
+        "ln2_b": ParamDef((d,), ("embed",), init="zeros"),
+        "tm": {
+            "mu_r": ParamDef((d,), ("embed",), init="zeros"),
+            "mu_k": ParamDef((d,), ("embed",), init="zeros"),
+            "mu_v": ParamDef((d,), ("embed",), init="zeros"),
+            "mu_w": ParamDef((d,), ("embed",), init="zeros"),
+            "mu_g": ParamDef((d,), ("embed",), init="zeros"),
+            "w_r": ParamDef((d, h, k), ("embed", "heads", "head_dim")),
+            "w_k": ParamDef((d, h, k), ("embed", "heads", "head_dim")),
+            "w_v": ParamDef((d, h, k), ("embed", "heads", "head_dim")),
+            "w_g": ParamDef((d, h, k), ("embed", "heads", "head_dim")),
+            "w0": ParamDef((h, k), ("heads", "head_dim"), init="ssm_dt"),
+            "wa": ParamDef((d, r), ("embed", "lora")),
+            "wb": ParamDef((r, h, k), ("lora", "heads", "head_dim"), init="zeros"),
+            "u": ParamDef((h, k), ("heads", "head_dim"), init="zeros"),
+            "gn_s": ParamDef((d,), ("embed",), init="ones"),
+            "gn_b": ParamDef((d,), ("embed",), init="zeros"),
+            "w_o": ParamDef((h, k, d), ("heads", "head_dim", "embed"),
+                            fan_in_axes=(0, 1)),
+        },
+        "cm": {
+            "mu_k": ParamDef((d,), ("embed",), init="zeros"),
+            "mu_r": ParamDef((d,), ("embed",), init="zeros"),
+            "w_k": ParamDef((d, cfg.d_ff), ("embed", "mlp")),
+            "w_v": ParamDef((cfg.d_ff, d), ("mlp", "embed")),
+            "w_r": ParamDef((d, d), ("embed", "embed")),
+        },
+    }
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> dict:
+    h, k = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, k, k), jnp.float32),
+        "tm_last": jnp.zeros((batch, cfg.d_model), dtype),
+        "cm_last": jnp.zeros((batch, cfg.d_model), dtype),
+    }
+
+
+def _layernorm(x, s, b, eps=1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * lax.rsqrt(var + eps)
+    return (y * s.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _group_norm(x, s, b, n_heads, eps=1e-5):
+    """Per-head normalization of (B, S, H*K)."""
+    bsz, slen, d = x.shape
+    xh = x.reshape(bsz, slen, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xh, axis=-1, keepdims=True)
+    var = jnp.var(xh, axis=-1, keepdims=True)
+    y = ((xh - mu) * lax.rsqrt(var + eps)).reshape(bsz, slen, d)
+    return (y * s.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _token_shift(x, mu, last=None):
+    """mix x_t with x_{t-1}: x + mu * (x_{t-1} - x_t).  last: (B, D)."""
+    if last is None:
+        prev = jnp.pad(x[:, :-1], ((0, 0), (1, 0), (0, 0)))
+    else:
+        prev = jnp.concatenate([last[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+    return x + mu.astype(x.dtype) * (prev - x)
+
+
+# ---------------------------------------------------------------------------
+# WKV core
+# ---------------------------------------------------------------------------
+
+def wkv_recurrent_ref(r, k, v, logw, u, init_state=None):
+    """Oracle.  r/k/v: (B,S,H,K); logw: (B,S,H,K) (≤0); u: (H,K)."""
+    b, s, h, kk = r.shape
+    state = (jnp.zeros((b, h, kk, kk), jnp.float32) if init_state is None
+             else init_state)
+
+    def step(state, t):
+        rt = r[:, t].astype(jnp.float32)
+        kt = k[:, t].astype(jnp.float32)
+        vt = v[:, t].astype(jnp.float32)
+        wt = jnp.exp(logw[:, t].astype(jnp.float32))
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, state + u[None, :, :, None] * kv)
+        state = state * wt[..., None] + kv
+        return state, y
+
+    state, ys = lax.scan(step, state, jnp.arange(s))
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), state
+
+
+def wkv_chunked(r, k, v, logw, u, chunk: int = CHUNK, init_state=None):
+    """Chunked WKV; same semantics as the oracle."""
+    b, s, h, kk = r.shape
+    if s % chunk:
+        pad = chunk - s % chunk
+        zpad = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = (jnp.pad(t, zpad) for t in (r, k, v))
+        logw = jnp.pad(logw, zpad)   # log w = 0 -> w = 1 for padding (harmless)
+    sp = r.shape[1]
+    nc = sp // chunk
+    f32 = jnp.float32
+    rc = r.reshape(b, nc, chunk, h, kk).astype(f32)
+    kc = k.reshape(b, nc, chunk, h, kk).astype(f32)
+    vc = v.reshape(b, nc, chunk, h, kk).astype(f32)
+    lw = logw.reshape(b, nc, chunk, h, kk).astype(f32)
+
+    # inclusive cumsum as a triangular matmul (see ssm.ssd_chunked: the
+    # associative-scan lowering of jnp.cumsum thrashes HBM inside layer scans)
+    tril = jnp.tril(jnp.ones((chunk, chunk), f32))
+    lc = jnp.einsum("qt,bcthk->bcqhk", tril, lw)    # inclusive cumsum (B,C,Q,H,K)
+    lc_prev = lc - lw                                # Lc_{t-1} (exclusive)
+    total = lc[:, :, -1]                             # (B,C,H,K)
+
+    clamp = lambda e: jnp.clip(e, -EXP_CLAMP, EXP_CLAMP)
+    r_tilde = rc * jnp.exp(clamp(lc_prev))           # query side
+    k_tilde = kc * jnp.exp(clamp(-lc))               # key side
+    k_carry = kc * jnp.exp(clamp(total[:, :, None] - lc))  # decay to chunk end
+
+    idx = jnp.arange(chunk)
+    strict = (idx[:, None] > idx[None, :])[None, None, None]   # (1,1,1,Q,Q) t>j
+
+    scores = jnp.einsum("bcthk,bcjhk->bchtj", r_tilde, k_tilde)
+    scores = jnp.where(strict, scores, 0.0)
+    y_intra = jnp.einsum("bchtj,bcjhv->bcthv", scores, vc)
+
+    diag = jnp.einsum("bcthk,hk,bcthk->bcth", rc, u.astype(f32), kc)
+    y_intra = y_intra + diag[..., None] * vc
+
+    chunk_state = jnp.einsum("bcjhk,bcjhv->bchkv", k_carry, vc)
+    chunk_decay = jnp.exp(total)                     # (B,C,H,K)
+
+    state0 = (jnp.zeros((b, h, kk, kk), f32) if init_state is None
+              else init_state.astype(f32))
+
+    def chunk_step(state, inp):
+        cs, cd = inp
+        prev = state
+        state = state * cd[..., None] + cs
+        return state, prev
+
+    final_state, prev_states = lax.scan(
+        chunk_step, state0,
+        (jnp.moveaxis(chunk_state, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)    # (B,C,H,K,V)
+
+    y_inter = jnp.einsum("bcthk,bchkv->bcthv", r_tilde, prev_states)
+    y = (y_intra + y_inter).reshape(b, sp, h, kk)[:, :s]
+    return y.astype(r.dtype), final_state
+
+
+# ---------------------------------------------------------------------------
+# Full block
+# ---------------------------------------------------------------------------
+
+def rwkv_block_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                   cache: dict | None = None):
+    """Full RWKV6 block (time-mix + channel-mix).  x: (B, S, D)."""
+    h, kdim = _dims(cfg)
+    tm, cm = params["tm"], params["cm"]
+    new_cache = dict(cache) if cache is not None else None
+
+    # ---- time mix -----------------------------------------------------
+    xn = _layernorm(x, params["ln1_s"], params["ln1_b"])
+    last = cache["tm_last"] if cache is not None else None
+    xr = _token_shift(xn, tm["mu_r"], last)
+    xk = _token_shift(xn, tm["mu_k"], last)
+    xv = _token_shift(xn, tm["mu_v"], last)
+    xw = _token_shift(xn, tm["mu_w"], last)
+    xg = _token_shift(xn, tm["mu_g"], last)
+
+    r = dense(tm["w_r"], xr, cfg)          # (B,S,H,K)
+    k = dense(tm["w_k"], xk, cfg)
+    v = dense(tm["w_v"], xv, cfg)
+    g = jax.nn.silu(dense(tm["w_g"], xg, cfg))
+    r = shard(r, "batch", None, "heads", "head_dim")
+    k = shard(k, "batch", None, "heads", "head_dim")
+    v = shard(v, "batch", None, "heads", "head_dim")
+
+    # data-dependent decay (the Finch LoRA)
+    lora = jnp.einsum("bsd,dr->bsr", jnp.tanh(xw.astype(jnp.float32)),
+                      tm["wa"].astype(jnp.float32))
+    ddd = jnp.einsum("bsr,rhk->bshk", lora, tm["wb"].astype(jnp.float32))
+    logw = -jnp.exp(jnp.clip(tm["w0"].astype(jnp.float32)[None, None] + ddd,
+                             -8.0, 8.0))            # per-step log decay ≤ 0
+
+    state0 = cache["state"] if cache is not None else None
+    if x.shape[1] == 1 and cache is not None:
+        y, state = wkv_recurrent_ref(r, k, v, logw, tm["u"], init_state=state0)
+    else:
+        y, state = wkv_chunked(r, k, v, logw, tm["u"], init_state=state0)
+    y = y.reshape(x.shape[0], x.shape[1], -1)
+    y = _group_norm(y, tm["gn_s"], tm["gn_b"], h)
+    y = y * g.reshape(y.shape)
+    att = jnp.einsum("bshk,hkd->bsd", y.reshape(*x.shape[:2], h, kdim),
+                     tm["w_o"].astype(y.dtype))
+    x = x + shard(att, "batch", None, None)
+
+    # ---- channel mix ----------------------------------------------------
+    xn2 = _layernorm(x, params["ln2_s"], params["ln2_b"])
+    last2 = cache["cm_last"] if cache is not None else None
+    xk2 = _token_shift(xn2, cm["mu_k"], last2)
+    xr2 = _token_shift(xn2, cm["mu_r"], last2)
+    kk = jnp.square(jax.nn.relu(dense(cm["w_k"], xk2, cfg)))
+    kk = shard(kk, "batch", None, "mlp")
+    vv = dense(cm["w_v"], kk, cfg)
+    rr = jax.nn.sigmoid(dense(cm["w_r"], xr2, cfg))
+    x = x + shard(rr * vv, "batch", None, None)
+
+    if cache is not None:
+        new_cache = {"state": state, "tm_last": xn[:, -1], "cm_last": xn2[:, -1]}
+    return x, new_cache

@@ -1,0 +1,15 @@
+"""Optimizer substrate: AdamW (bf16-state option), schedules, clipping,
+int8 gradient compression with error feedback."""
+
+from repro.optim.compression import compress_with_error_feedback, int8_psum
+from repro.optim.optimizer import (AdamWConfig, OptState, adamw_init,
+                                   adamw_update, clip_by_global_norm,
+                                   constant_schedule, cosine_schedule,
+                                   global_norm, linear_schedule)
+
+__all__ = [
+    "AdamWConfig", "OptState", "adamw_init", "adamw_update",
+    "clip_by_global_norm", "global_norm",
+    "cosine_schedule", "linear_schedule", "constant_schedule",
+    "compress_with_error_feedback", "int8_psum",
+]

@@ -1,0 +1,6 @@
+"""Runtime substrate: fault tolerance, stragglers, elastic re-meshing."""
+
+from repro.runtime.fault import (StepTimer, StragglerWatchdog, plan_mesh,
+                                 retry_with_backoff)
+
+__all__ = ["StepTimer", "StragglerWatchdog", "plan_mesh", "retry_with_backoff"]

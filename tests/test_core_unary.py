@@ -1,0 +1,151 @@
+"""Core unary arithmetic: encodings, simulators, equivalence to the oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gemm_sims as gs
+from repro.core import unary
+from repro.core.quantization import quantize, vmax
+
+
+def rand_ints(rng, bits, shape):
+    v = vmax(bits)
+    return jnp.asarray(rng.integers(-v, v + 1, shape), jnp.int8)
+
+
+class TestEncodings:
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_temporal_roundtrip(self, rng, bits):
+        q = rand_ints(rng, bits, (4, 5))
+        stream, sign = unary.encode_temporal(q, bits)
+        assert stream.shape[0] == unary.temporal_stream_len(bits)
+        assert bool(jnp.all(unary.decode_temporal(stream, sign) == q))
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_tub_roundtrip(self, rng, bits):
+        q = rand_ints(rng, bits, (6,))
+        s2, lsb, sign = unary.encode_tub(q, bits)
+        assert s2.shape[0] == unary.tub_stream_len(bits)
+        assert bool(jnp.all(unary.decode_tub(s2, lsb, sign) == q))
+
+    def test_temporal_stream_is_thermometer(self, rng):
+        """1s are consecutive from slot 0 (exactly two signal transitions)."""
+        q = rand_ints(rng, 4, (8,))
+        stream, _ = unary.encode_temporal(q, 4)
+        diffs = jnp.diff(stream.astype(jnp.int32), axis=0)
+        # once the stream drops to 0 it never rises again
+        assert bool(jnp.all(diffs <= 0))
+
+    def test_van_der_corput_low_discrepancy(self):
+        seq = np.asarray(unary.van_der_corput(256))
+        assert len(np.unique(seq)) == 256
+        # first 2^k prefix is equidistributed
+        for k in (16, 64, 256):
+            assert abs(np.mean(seq[:k]) - 0.5) < 1.0 / k + 0.01
+
+    @pytest.mark.parametrize("bits,scheme", [(4, "temporal"), (4, "tub"),
+                                             (8, "temporal")])
+    def test_bit_sparsity_of_stream(self, rng, bits, scheme):
+        q = rand_ints(rng, bits, (64,))
+        b = float(unary.bit_sparsity_of_stream(q, bits, scheme))
+        assert 0.0 <= b <= 1.0
+
+
+class TestExactSimulators:
+    """tuGEMM and tubGEMM are deterministic: bit-identical to integer GEMM."""
+
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    @pytest.mark.parametrize("shape", [(3, 4, 5), (1, 8, 2), (7, 3, 7)])
+    def test_tugemm_stream_equals_oracle(self, rng, bits, shape):
+        m, k, n = shape
+        a, b = rand_ints(rng, bits, (m, k)), rand_ints(rng, bits, (k, n))
+        out, cycles = gs.tugemm_stream(a, b, bits)
+        assert bool(jnp.all(out == gs.bgemm_exact(a, b)))
+        assert cycles == k * (2 ** (bits - 1)) ** 2
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    @pytest.mark.parametrize("shape", [(3, 4, 5), (2, 6, 3)])
+    def test_tubgemm_stream_equals_oracle(self, rng, bits, shape):
+        m, k, n = shape
+        a, b = rand_ints(rng, bits, (m, k)), rand_ints(rng, bits, (k, n))
+        out, cycles = gs.tubgemm_stream(a, b, bits)
+        assert bool(jnp.all(out == gs.bgemm_exact(a, b)))
+        assert cycles == k * max(1, 2 ** (bits - 2))
+
+    @given(bits=st.sampled_from([2, 3, 4]),
+           m=st.integers(1, 5), k=st.integers(1, 6), n=st.integers(1, 5),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_property_exact_designs_match_oracle(self, bits, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        v = vmax(bits)
+        a = jnp.asarray(r.integers(-v, v + 1, (m, k)), jnp.int8)
+        b = jnp.asarray(r.integers(-v, v + 1, (k, n)), jnp.int8)
+        oracle = gs.bgemm_exact(a, b)
+        assert bool(jnp.all(gs.tugemm_stream(a, b, bits)[0] == oracle))
+        assert bool(jnp.all(gs.tubgemm_stream(a, b, bits)[0] == oracle))
+
+
+class TestUGEMM:
+    def test_stream_matches_lut_fast_path(self, rng):
+        for bits in (2, 4, 8):
+            a, b = rand_ints(rng, bits, (5, 16)), rand_ints(rng, bits, (16, 5))
+            s, cycles = gs.ugemm_stream(a, b, bits)
+            f = gs.ugemm_exact(a, b, bits=bits)
+            assert cycles == 2 ** bits
+            np.testing.assert_allclose(np.asarray(s), np.asarray(f),
+                                       rtol=1e-4, atol=1e-2)
+
+    def test_exact_at_2bit(self, rng):
+        a, b = rand_ints(rng, 2, (4, 8)), rand_ints(rng, 2, (8, 4))
+        out = gs.ugemm_exact(a, b, bits=2)
+        assert bool(jnp.all(out == gs.bgemm_exact(a, b)))
+
+    def test_8bit_error_small(self, rng):
+        """Paper: uGEMM output within ~1% of ideal at 8-bit GEMM level."""
+        a, b = rand_ints(rng, 8, (16, 64)), rand_ints(rng, 8, (64, 16))
+        est = gs.ugemm_exact(a, b, bits=8)
+        oracle = np.asarray(gs.bgemm_exact(a, b), np.float64)
+        rel = np.sqrt(np.mean((np.asarray(est) - oracle) ** 2)) / \
+            np.sqrt(np.mean(oracle ** 2))
+        assert rel < 0.04
+
+    def test_stochastic_error_decreases_with_bits(self, rng):
+        errs = {}
+        for bits in (4, 8):
+            a, b = rand_ints(rng, bits, (8, 32)), rand_ints(rng, bits, (32, 8))
+            est = np.asarray(gs.ugemm_exact(a, b, bits=bits), np.float64)
+            oracle = np.asarray(gs.bgemm_exact(a, b), np.float64)
+            errs[bits] = np.sqrt(np.mean((est - oracle) ** 2)) / \
+                np.sqrt(np.mean(oracle ** 2))
+        assert errs[8] < errs[4]
+
+
+class TestLatencyModel:
+    def test_wc_cycles_formulas(self):
+        # paper §II: bGEMM N, uGEMM 2^w, tuGEMM N(2^(w-1))^2, tubGEMM N·2^(w-2)
+        assert gs.wc_cycles("bgemm", 8, 16) == 16
+        assert gs.wc_cycles("ugemm", 8, 16) == 256
+        assert gs.wc_cycles("tugemm", 8, 16) == 16 * 128 ** 2
+        assert gs.wc_cycles("tubgemm", 8, 16) == 16 * 64
+
+    def test_dynamic_cycles_eq1(self):
+        # Eq. 1: dynamic = WC * (1 - b_spa); only temporal designs benefit
+        wc = gs.wc_cycles("tubgemm", 8, 32)
+        assert gs.dynamic_cycles_from_sparsity("tubgemm", 8, 32, 0.4) == \
+            pytest.approx(wc * 0.6)
+        assert gs.dynamic_cycles_from_sparsity("bgemm", 8, 32, 0.9) == \
+            gs.wc_cycles("bgemm", 8, 32)
+        assert gs.dynamic_cycles_from_sparsity("ugemm", 8, 32, 0.9) == \
+            gs.wc_cycles("ugemm", 8, 32)
+
+    @given(bspa=st.floats(0.0, 1.0), bits=st.sampled_from([2, 4, 8]),
+           n=st.sampled_from([16, 32, 64]))
+    @settings(max_examples=40, deadline=None)
+    def test_property_dynamic_never_exceeds_wc(self, bspa, bits, n):
+        for d in gs.DESIGNS:
+            dyn = gs.dynamic_cycles_from_sparsity(d, bits, n, bspa)
+            assert dyn <= gs.wc_cycles(d, bits, n) + 1e-9

@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel vs the jnp oracle: values AND gradients,
+shape/dtype/causality sweeps, interpret mode (CPU container; TPU target)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import naive_attention
+
+
+def qkv(rng, b, s, h, d, dtype=jnp.float32):
+    mk = lambda: jnp.asarray(rng.normal(0, 1, (b, s, h, d)), dtype)
+    return mk(), mk(), mk()
+
+
+class TestForward:
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("shape", [(1, 128, 2, 32), (2, 256, 4, 16),
+                                       (2, 64, 1, 64)])
+    def test_matches_naive(self, rng, causal, shape):
+        b, s, h, d = shape
+        q, k, v = qkv(rng, b, s, h, d)
+        got = flash_attention(q, k, v, causal=causal, bq=64, bk=64,
+                              interpret=True)
+        want = naive_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_block_shape_independence(self, rng):
+        q, k, v = qkv(rng, 1, 256, 2, 32)
+        outs = [np.asarray(flash_attention(q, k, v, causal=True, bq=bq, bk=bk,
+                                           interpret=True))
+                for bq, bk in ((64, 64), (128, 64), (256, 128), (256, 256))]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)
+
+    def test_bf16(self, rng):
+        q, k, v = qkv(rng, 1, 128, 2, 32, jnp.bfloat16)
+        got = flash_attention(q, k, v, causal=True, bq=64, bk=64,
+                              interpret=True)
+        want = naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=3e-2, atol=3e-2)
+
+
+class TestBackward:
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_grads_match_naive(self, rng, causal):
+        b, s, h, d = 1, 128, 2, 32
+        q, k, v = qkv(rng, b, s, h, d)
+
+        def f_kernel(q, k, v):
+            return jnp.sum(flash_attention(q, k, v, causal=causal, bq=64,
+                                           bk=64, interpret=True) ** 2)
+
+        def f_naive(q, k, v):
+            return jnp.sum(naive_attention(q, k, v, causal=causal) ** 2)
+
+        g1 = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+        g2 = jax.grad(f_naive, argnums=(0, 1, 2))(q, k, v)
+        for a, b_ in zip(g1, g2):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                       rtol=2e-4, atol=2e-4)
+
+    def test_grad_block_independence(self, rng):
+        q, k, v = qkv(rng, 1, 128, 1, 16)
+
+        def loss(bq):
+            def f(q, k, v):
+                return jnp.sum(flash_attention(q, k, v, causal=True, bq=bq,
+                                               bk=bq, interpret=True) ** 2)
+            return jax.grad(f)(q, k, v)
+
+        g64 = loss(64)
+        g128 = loss(128)
+        np.testing.assert_allclose(np.asarray(g64), np.asarray(g128),
+                                   rtol=1e-4, atol=1e-4)

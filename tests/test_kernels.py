@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparsity
+from repro.core.quantization import quantize, vmax
+from repro.kernels import ops, ref
+
+
+def rand_codes(rng, bits, shape):
+    v = vmax(bits)
+    return jnp.asarray(rng.integers(-v, v + 1, shape), jnp.int8)
+
+
+class TestPacking:
+    @pytest.mark.parametrize("bits", [8, 4, 2])
+    @pytest.mark.parametrize("shape,axis", [((64, 48), 0), ((32, 64), 1),
+                                            ((8, 16, 24), 1)])
+    def test_roundtrip(self, rng, bits, shape, axis):
+        q = rand_codes(rng, bits, shape)
+        packed = ops.pack_values(q, bits, axis=axis)
+        pack = 8 // bits
+        assert packed.shape[axis] == shape[axis] // pack
+        out = ref.unpack_values_ref(packed, bits, axis=axis)
+        assert bool(jnp.all(out == q))
+
+    def test_kernel_unpack_matches_ref(self, rng):
+        from repro.kernels.quant_gemm import unpack_values
+        for bits in (4, 2):
+            q = rand_codes(rng, bits, (32, 16))
+            packed = ops.pack_values(q, bits, axis=0)
+            assert bool(jnp.all(unpack_values(packed, bits, axis=0) ==
+                                ref.unpack_values_ref(packed, bits, axis=0)))
+
+
+class TestQuantGemmKernel:
+    @pytest.mark.parametrize("bits", [8, 4, 2])
+    @pytest.mark.parametrize("mkn", [(4, 8, 12), (130, 260, 70), (1, 512, 128),
+                                     (128, 128, 128), (37, 64, 200)])
+    def test_matches_ref_int(self, rng, bits, mkn):
+        m, k, n = mkn
+        pack = 8 // bits
+        k += (-k) % pack
+        x = jnp.asarray(rng.integers(-127, 128, (m, k)), jnp.int8)
+        w = rand_codes(rng, bits, (k, n))
+        wp = ops.pack_values(w, bits, axis=0)
+        got = ops.int_matmul(x, wp, bits=bits, interpret=True)
+        want = ref.quant_gemm_ref(x, wp, bits=bits)
+        assert bool(jnp.all(got == want))
+
+    @pytest.mark.parametrize("block", [(128, 128, 128), (64, 64, 64),
+                                       (32, 128, 64)])
+    def test_block_shapes(self, rng, block):
+        x = jnp.asarray(rng.integers(-127, 128, (96, 192)), jnp.int8)
+        w = rand_codes(rng, 8, (192, 96))
+        wp = ops.pack_values(w, 8, axis=0)
+        got = ops.int_matmul(x, wp, bits=8, block=block, interpret=True)
+        assert bool(jnp.all(got == ref.quant_gemm_ref(x, wp, bits=8)))
+
+    def test_fused_dequant_epilogue(self, rng):
+        x = jnp.asarray(rng.normal(0, 1, (33, 64)), jnp.float32)
+        w = jnp.asarray(rng.normal(0, 0.1, (64, 40)), jnp.float32)
+        wq = quantize(w, bits=8)
+        got = ops.quantized_matmul(x, wq, interpret=True)
+        rel = float(jnp.max(jnp.abs(got - x @ w)) / jnp.max(jnp.abs(x @ w)))
+        assert rel < 0.05
+
+    @pytest.mark.parametrize("bits", [4, 2])
+    def test_low_bit_end_to_end(self, rng, bits):
+        x = jnp.asarray(rng.normal(0, 1, (16, 128)), jnp.float32)
+        w = jnp.asarray(rng.normal(0, 0.1, (128, 32)), jnp.float32)
+        wq = quantize(w, bits=bits)
+        got = ops.quantized_matmul(x, wq, interpret=True)
+        # w-bit weights: coarse but correlated
+        ref_out = x @ wq.dequantize()
+        rel = float(jnp.sqrt(jnp.mean((got - ref_out) ** 2)) /
+                    jnp.sqrt(jnp.mean(ref_out ** 2)))
+        assert rel < 0.25
+
+    @given(m=st.integers(1, 64), k=st.integers(1, 64), n=st.integers(1, 64),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_property_int8_kernel_exact(self, m, k, n, seed):
+        r = np.random.default_rng(seed)
+        x = jnp.asarray(r.integers(-127, 128, (m, k)), jnp.int8)
+        w = jnp.asarray(r.integers(-127, 128, (k, n)), jnp.int8)
+        got = ops.int_matmul(x, w, bits=8, block=(32, 32, 32), interpret=True)
+        want = jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))
+        assert bool(jnp.all(got == want))
+
+
+class TestBitSparsityKernel:
+    @pytest.mark.parametrize("shape", [(32, 32), (100, 300), (257, 65), (7, 9)])
+    @pytest.mark.parametrize("bits", [4, 8])
+    def test_matches_core_profile(self, rng, shape, bits):
+        q = quantize(jnp.asarray(rng.normal(0, 0.1, shape), jnp.float32),
+                     bits=bits, per_channel=False).values
+        word_k, bspa_k = ops.bit_sparsity_stats(q, bits=bits, interpret=True)
+        st_ = sparsity.profile_tensor(q, bits=bits, pre_quantized=True)
+        assert float(word_k) == pytest.approx(st_.word, abs=1e-6)
+        assert float(bspa_k) == pytest.approx(st_.bit_blockmax, abs=1e-6)
+
+    def test_matches_ref(self, rng):
+        q = rand_codes(rng, 8, (96, 160))
+        word_k, bspa_k = ops.bit_sparsity_stats(q, bits=8, interpret=True)
+        word_r, bspa_r = ref.bit_sparsity_stats_ref(q, bits=8)
+        assert float(word_k) == pytest.approx(float(word_r), abs=1e-6)
+        assert float(bspa_k) == pytest.approx(float(bspa_r), abs=1e-6)

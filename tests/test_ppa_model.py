@@ -1,0 +1,125 @@
+"""PPA cost model: exact reproduction of the paper's Tables I-IV + Fig. 2."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ppa
+from repro.core.accounting import GemmCall, GemmWorkloadRecorder, price_workload
+from repro.core.gemm_sims import DESIGNS
+
+
+class TestPaperTables:
+    def test_table3_energy_reproduced(self):
+        """Derived energy (power x WC latency) matches Table III to <1%."""
+        for (bits, n), row in ppa.PAPER_ENERGY_NJ.items():
+            for design, ref in row.items():
+                got = ppa.energy_nj(design, bits, n)
+                assert got == pytest.approx(ref, rel=0.01), \
+                    f"{design} {bits}b {n}x{n}: {got} vs paper {ref}"
+
+    def test_table4_adp_reproduced(self):
+        for (bits, n), row in ppa.PAPER_ADP_MM2_NS.items():
+            for design, ref in row.items():
+                assert ppa.adp_mm2_ns(design, bits, n) == \
+                    pytest.approx(ref, rel=0.01)
+
+    def test_area_power_grid_hits_are_exact(self):
+        assert ppa.area_um2("tugemm", 8, 16) == 61_064.0
+        assert ppa.power_mw("bgemm", 8, 32) == 321.3
+        assert ppa.area_um2("ugemm", 4, 128) == pytest.approx(140.24e6)
+
+    def test_fig2_slopes(self):
+        """Paper Fig. 2: per-bitwidth-doubling ratios at 32x32."""
+        area = {d: ppa.fig2_slope(ppa.AREA_UM2, d) for d in DESIGNS}
+        assert area["tugemm"] == pytest.approx(2.12, abs=0.02)
+        assert area["tubgemm"] == pytest.approx(2.12, abs=0.02)
+        assert area["ugemm"] == pytest.approx(2.16, abs=0.02)
+        assert area["bgemm"] == pytest.approx(2.90, abs=0.02)
+        power = {d: ppa.fig2_slope(ppa.POWER_MW, d) for d in DESIGNS}
+        assert power["ugemm"] == pytest.approx(1.56, abs=0.02)   # best scaling
+        assert power["tugemm"] == pytest.approx(2.02, abs=0.02)
+        assert power["tubgemm"] == pytest.approx(2.15, abs=0.02)
+        assert power["bgemm"] == pytest.approx(3.25, abs=0.04)
+
+    def test_key_takeaways(self):
+        """The paper's qualitative conclusions hold in the model."""
+        # tuGEMM best area/power everywhere on the grid
+        for (bits, n) in ppa.AREA_UM2:
+            assert min(ppa.AREA_UM2[(bits, n)], key=ppa.AREA_UM2[(bits, n)].get) \
+                == "tugemm"
+        # tubGEMM most energy-efficient at 2 bits (beats bGEMM)
+        assert ppa.energy_nj("tubgemm", 2, 32) < ppa.energy_nj("bgemm", 2, 32)
+        # bGEMM most energy-efficient at 8 bits
+        assert all(ppa.energy_nj("bgemm", 8, 32) < ppa.energy_nj(d, 8, 32)
+                   for d in DESIGNS if d != "bgemm")
+        # tubGEMM overtakes bGEMM at CloudTPUv3 (128x128) size, 4-bit (~12%)
+        e_tub = ppa.energy_nj("tubgemm", 4, 128)
+        e_b = ppa.energy_nj("bgemm", 4, 128)
+        assert e_tub < e_b
+        assert (1 - e_tub / e_b) == pytest.approx(0.11, abs=0.03)
+        # bGEMM lowest ADP
+        for n in (64, 128):
+            assert min(DESIGNS, key=lambda d: ppa.adp_mm2_ns(d, 4, n)) == "bgemm"
+
+    def test_offgrid_fit_interpolates_sanely(self):
+        """Fit predictions are monotone and within ~2x of neighbors."""
+        for d in DESIGNS:
+            a16, a24, a32 = (ppa.area_um2(d, 4, n) for n in (16, 24, 32))
+            assert a16 < a24 < a32
+            p2, p3, p4 = (ppa.power_mw(d, b, 16) for b in (2, 3, 4))
+            assert p2 < p3 < p4
+
+
+class TestSparsityEnergy:
+    def test_fig3_sparsity_improvements(self):
+        """Fig. 3: with CNN-level bit sparsity (~45%), tubGEMM's 2-bit gap
+        grows and the crossover with bGEMM moves earlier."""
+        b_spa = 0.45
+        e_tub_dyn = ppa.dynamic_energy_nj("tubgemm", 2, 32, b_spa)
+        e_b = ppa.energy_nj("bgemm", 2, 32)
+        assert e_tub_dyn < ppa.energy_nj("tubgemm", 2, 32) < e_b
+        # at 4-bit WC tubGEMM loses to bGEMM; with sparsity the gap shrinks
+        gap_wc = ppa.energy_nj("tubgemm", 4, 32) / ppa.energy_nj("bgemm", 4, 32)
+        gap_dyn = ppa.dynamic_energy_nj("tubgemm", 4, 32, b_spa) / \
+            ppa.energy_nj("bgemm", 4, 32)
+        assert gap_dyn < gap_wc
+
+    @given(bspa=st.floats(0.0, 0.99), bits=st.sampled_from([2, 4, 8]))
+    @settings(max_examples=30, deadline=None)
+    def test_property_sparsity_only_helps_temporal(self, bspa, bits):
+        for d in DESIGNS:
+            dyn = ppa.dynamic_energy_nj(d, bits, 32, bspa)
+            wc = ppa.energy_nj(d, bits, 32)
+            if d in ("tugemm", "tubgemm"):
+                assert dyn <= wc + 1e-12
+            else:
+                assert dyn == pytest.approx(wc)
+
+
+class TestDLAModel:
+    def test_tiling(self):
+        dla = ppa.DLAModel(design="tubgemm", bits=4, n=128, num_units=4)
+        assert dla.tiles(128, 128) == 1
+        assert dla.tiles(129, 128) == 2
+        assert dla.tiles(512, 512) == 16
+
+    def test_workload_pricing_consistency(self):
+        rec = GemmWorkloadRecorder()
+        rec.record("fc1", m=64, k=256, n_out=512, bit_sparsity=0.4)
+        rec.record("fc2", m=64, k=512, n_out=256, bit_sparsity=0.0, count=2)
+        cost = price_workload(rec.calls, design="tubgemm", bits=4, unit_n=128,
+                              num_units=2)
+        assert cost.total_macs == 64 * 256 * 512 + 2 * 64 * 512 * 256
+        assert cost.dyn_energy_uj < cost.wc_energy_uj          # sparsity helps
+        cost_b = price_workload(rec.calls, design="bgemm", bits=4, unit_n=128)
+        assert cost_b.dyn_energy_uj == pytest.approx(cost_b.wc_energy_uj)
+
+    @given(m=st.integers(1, 300), k=st.integers(1, 300), n=st.integers(1, 300))
+    @settings(max_examples=30, deadline=None)
+    def test_property_energy_scales_with_tiles(self, m, k, n):
+        dla = ppa.DLAModel(design="tubgemm", bits=4, n=64)
+        e1 = dla.matmul_energy_nj(m, k, n)
+        e2 = dla.matmul_energy_nj(2 * m, k, n)
+        assert e2 >= e1
