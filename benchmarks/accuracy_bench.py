@@ -24,10 +24,8 @@ def ugemm_accuracy():
         v = vmax(bits)
         a = jnp.asarray(rng.integers(-v, v + 1, (16, 64)), jnp.int8)
         b = jnp.asarray(rng.integers(-v, v + 1, (64, 16)), jnp.int8)
-        oracle = np.asarray(gs.bgemm_exact(a, b), np.float64)
-        est = np.asarray(gs.ugemm_exact(a, b, bits=bits), np.float64)
-        rel = float(np.sqrt(np.mean((est - oracle) ** 2)) /
-                    np.sqrt(np.mean(oracle ** 2)))
+        rel = gs.rel_rmse(gs.ugemm_exact(a, b, bits=bits),
+                          gs.bgemm_exact(a, b))
         rows.append((f"ugemm_{bits}b_gemm_relRMSE", rel, None))
         # deterministic designs: exact
         tu = np.asarray(gs.tugemm_stream(a[:, :8], b[:8], bits)[0])
@@ -40,6 +38,51 @@ def ugemm_accuracy():
     err8 = [r for n, r, _ in rows if n == "ugemm_8b_gemm_relRMSE"][0]
     err2 = [r for n, r, _ in rows if n == "ugemm_2b_gemm_relRMSE"][0]
     errs.append(0.0 if (err8 < 0.04 and err2 == 0.0) else 1.0)
+    return rows, max(errs)
+
+
+def unary_engine_sweep():
+    """Design x bit-width sweep through the batched vectorized engine.
+
+    Exercises ``gemm_sims.gemm_batched`` (one jit per design/bit-width over a
+    stacked batch of problems), checks the Pallas tubGEMM slot-loop kernel
+    for bit-identity, and reports the slot-parallel engine's speedup over the
+    sequential scan reference.
+    """
+    rng = np.random.default_rng(0)
+    rows, errs = [], []
+    batch, (m, k, n) = 4, (16, 32, 16)
+    for bits in (2, 4, 8):
+        v = vmax(bits)
+        a = jnp.asarray(rng.integers(-v, v + 1, (batch, m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-v, v + 1, (batch, k, n)), jnp.int8)
+        oracle = np.asarray(gs.gemm_batched("bgemm", a, b, bits), np.float64)
+        for design in gs.DESIGNS:
+            rel = gs.rel_rmse(gs.gemm_batched(design, a, b, bits), oracle)
+            rows.append((f"{design}_{bits}b_batched_relRMSE", rel,
+                         None if design == "ugemm" else 0.0))
+            if design != "ugemm":          # exact designs must be bit-identical
+                errs.append(0.0 if rel == 0.0 else 1.0)
+        got, _ = ops.tub_matmul(a[0], b[0], bits=bits, interpret=True)
+        ok = bool(np.array_equal(np.asarray(got), oracle[0]))
+        rows.append((f"unary_kernel_{bits}b_bitidentical", float(ok), 1.0))
+        errs.append(0.0 if ok else 1.0)
+    # slot-parallel engine vs the sequential scan reference (same numerics)
+    bits = 8
+    v = vmax(bits)
+    a = jnp.asarray(rng.integers(-v, v + 1, (m, k)), jnp.int8)
+    b = jnp.asarray(rng.integers(-v, v + 1, (k, n)), jnp.int8)
+    gs.tubgemm_stream(a, b, bits)[0].block_until_ready()      # warm
+    gs.tubgemm_stream_scan(a, b, bits)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        gs.tubgemm_stream(a, b, bits)[0].block_until_ready()
+    t_vec = (time.perf_counter() - t0) / 5
+    t0 = time.perf_counter()
+    for _ in range(5):
+        gs.tubgemm_stream_scan(a, b, bits)[0].block_until_ready()
+    t_scan = (time.perf_counter() - t0) / 5
+    rows.append(("tubgemm_stream_8b_vec_vs_scan_speedup", t_scan / t_vec, None))
     return rows, max(errs)
 
 

@@ -41,6 +41,7 @@ def main() -> None:
         ("fig3_sparsity_energy", tables.fig3_sparsity_energy, {}),
         ("table5_llama2_calibration", sparsity_bench.llama2_calibration, {}),
         ("ugemm_accuracy", accuracy_bench.ugemm_accuracy, {}),
+        ("unary_engine_sweep", accuracy_bench.unary_engine_sweep, {}),
         ("kernel_micro", accuracy_bench.kernel_micro, {}),
         ("roofline_dryrun", roofline.roofline_rows, {}),
     ]

@@ -1,0 +1,37 @@
+"""Cross-version jax API shims.
+
+The repo targets the modern ``jax.shard_map`` API (keyword ``check_vma``),
+but the pinned CI toolchain ships jax 0.4.37 where shard_map still lives in
+``jax.experimental.shard_map`` and the replication-check keyword is spelled
+``check_rep``.  Every shard_map call site in the codebase goes through
+:func:`shard_map` below so the rest of the code can use one spelling.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+__all__ = ["shard_map", "HAS_NATIVE_SHARD_MAP"]
+
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+
+if not HAS_NATIVE_SHARD_MAP:
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+
+def shard_map(f: Callable, *, mesh: Any, in_specs: Any, out_specs: Any,
+              check_vma: bool = True, **kwargs: Any) -> Callable:
+    """``jax.shard_map`` on new jax; the experimental fallback on 0.4.x.
+
+    ``check_vma`` is the modern name of 0.4.x's ``check_rep`` — both toggle
+    the same per-output replication check, so it is translated, not dropped.
+    """
+    if HAS_NATIVE_SHARD_MAP:
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma,
+                             **kwargs)
+    return _experimental_shard_map(f, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs, check_rep=check_vma,
+                                   **kwargs)

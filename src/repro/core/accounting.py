@@ -17,7 +17,7 @@ import dataclasses
 import math
 
 from repro.core import ppa
-from repro.core.gemm_sims import DESIGNS
+from repro.core import gemm_sims
 from repro.core.sparsity import SparsityStats
 
 __all__ = ["GemmCall", "GemmWorkloadRecorder", "ModelCost", "price_workload"]
@@ -91,7 +91,10 @@ class ModelCost:
 def price_workload(calls: list[GemmCall], design: str = "tubgemm",
                    bits: int = 4, unit_n: int = 128,
                    num_units: int = 1) -> ModelCost:
-    if design not in DESIGNS:
+    # live registry view (not the import-time DESIGNS snapshot) so designs
+    # registered after import are recognized; uncalibrated ones then fail
+    # in ppa with a clear "no PPA calibration" error
+    if design not in gemm_sims.DESIGNS:
         raise ValueError(f"unknown design {design!r}")
     dla = ppa.DLAModel(design=design, bits=bits, n=unit_n, num_units=num_units)
     wc_ns = dyn_ns = wc_nj = dyn_nj = 0.0

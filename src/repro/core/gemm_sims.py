@@ -11,10 +11,18 @@ Two fidelity levels:
   path.  For tuGEMM/tubGEMM/bGEMM the hardware is deterministic, so the exact
   functional result *is* integer GEMM; the value of the unary designs lies in
   the PPA/latency model (see ``core.ppa``), not a different numeric answer.
-* ``*_stream`` — cycle-faithful stream/counter simulators built from
-  ``lax.scan`` over time slots.  These exist to *prove* the functional
-  equivalence claim (tests assert bit-identity with the oracle) and to model
-  uGEMM's stochastic error.  They materialize streams, so use small shapes.
+* ``*_stream`` — cycle-faithful stream/counter simulators.  These exist to
+  *prove* the functional equivalence claim (tests assert bit-identity with
+  the oracle) and to model uGEMM's stochastic error.
+
+The stream engine is **slot-parallel**: instead of scanning one time slot per
+step (the original triple-nested ``lax.scan``, O(K·L²) sequential steps for
+tuGEMM), it materializes the unary pulse trains with ``core.unary`` encoders
+and contracts the slot axes in a single einsum.  Every slot of the hardware
+schedule is still explicitly represented — the sum over slot axes *is* the
+counter network — so results (outputs **and** cycle counts) are bit-identical
+to the sequential scans, which are kept as ``*_stream_scan`` references and
+cross-checked in the tests.
 
 Latency formulas (paper §II, outer-product dataflow, ``N`` = common dim = K):
 
@@ -27,14 +35,21 @@ Dynamic (sparsity-aware, Eq. 1) latency for the temporal designs scales the
 worst case by the occupied fraction of the unary stream, which in hardware is
 set by the *largest magnitude in the tile* (all lanes wait for the slowest
 counter): ``dyn = wc * max|q| / Vmax-equivalent``.
+
+Designs are dispatched through a registry (:func:`register_design`); the
+built-in four register at import.  New PE-array designs plug in without
+touching the dispatch functions.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.core.quantization import vmax
@@ -42,6 +57,9 @@ from repro.core import unary
 
 __all__ = [
     "DESIGNS",
+    "DesignSpec",
+    "register_design",
+    "get_design",
     "wc_cycles",
     "dynamic_cycles_from_sparsity",
     "dynamic_cycles_from_operand",
@@ -52,10 +70,97 @@ __all__ = [
     "tugemm_stream",
     "tubgemm_stream",
     "ugemm_stream",
+    "tugemm_stream_scan",
+    "tubgemm_stream_scan",
+    "ugemm_stream_scan",
     "gemm",
+    "gemm_batched",
+    "stream_gemm",
+    "rel_rmse",
 ]
 
-DESIGNS = ("ugemm", "tugemm", "tubgemm", "bgemm")
+
+def rel_rmse(est, oracle) -> float:
+    """Relative RMSE of an estimate vs its oracle (0.0 means bit-exact).
+
+    The accuracy metric every uGEMM-vs-binary comparison in this repo uses;
+    guarded against an all-zero oracle.
+    """
+    est = np.asarray(est, np.float64)
+    oracle = np.asarray(oracle, np.float64)
+    denom = float(np.sqrt(np.mean(oracle ** 2)))
+    return float(np.sqrt(np.mean((est - oracle) ** 2)) / max(denom, 1e-12))
+
+
+# ---------------------------------------------------------------------------
+# Design registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DesignSpec:
+    """Everything the dispatch layer needs to know about one PE-array design.
+
+    ``exact_fn(a, b, bits)`` — fast functional GEMM.
+    ``stream_fn(a, b, bits)`` — cycle-faithful sim, returns ``(out, cycles)``.
+    ``wc_cycles_fn(bits, common_dim)`` — worst-case latency formula.
+    ``sparsity_aware`` — True iff the unit early-terminates on bit sparsity
+    (paper Eq. 1 applies); False runs at worst case regardless of operands.
+    ``dyn_operand_fn(bits, step_max)`` — dynamic cycles from the per-outer-
+    product-step max magnitudes ``step_max: (K,)``; None means worst case.
+    """
+
+    name: str
+    exact_fn: Callable[[jax.Array, jax.Array, int], jax.Array]
+    stream_fn: Callable[[jax.Array, jax.Array, int], tuple]
+    wc_cycles_fn: Callable[[int, int], int]
+    sparsity_aware: bool = False
+    dyn_operand_fn: Callable[[int, jax.Array], jax.Array] | None = None
+
+
+_REGISTRY: dict[str, DesignSpec] = {}
+
+# Canonical design order (rebuilt by register_design; kept a plain tuple for
+# the many call sites that iterate/parametrize over it).
+DESIGNS: tuple[str, ...] = ()
+
+
+def register_design(name: str,
+                    exact_fn: Callable,
+                    stream_fn: Callable,
+                    wc_cycles_fn: Callable[[int, int], int],
+                    *,
+                    sparsity_aware: bool = False,
+                    dyn_operand_fn: Callable | None = None,
+                    overwrite: bool = False) -> DesignSpec:
+    """Register a GEMM unit design with the dispatch layer.
+
+    Replaces the old if-chains in ``gemm`` / ``wc_cycles`` /
+    ``dynamic_cycles_from_sparsity``: everything dispatching through this
+    module (``gemm``, ``gemm_batched``, ``stream_gemm``, the cycle models)
+    picks new designs up immediately.  PPA *pricing* additionally needs
+    paper-calibrated synthesis data, which ``core.ppa`` only has for the
+    built-in four — pricing an uncalibrated design raises a clear error.
+    Consumers holding a from-import snapshot of ``DESIGNS`` (taken at their
+    import time) won't see later registrations; read ``gemm_sims.DESIGNS``
+    via the module attribute for a live view.
+    """
+    global DESIGNS
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"design {name!r} already registered")
+    spec = DesignSpec(name=name, exact_fn=exact_fn, stream_fn=stream_fn,
+                      wc_cycles_fn=wc_cycles_fn,
+                      sparsity_aware=sparsity_aware,
+                      dyn_operand_fn=dyn_operand_fn)
+    _REGISTRY[name] = spec
+    DESIGNS = tuple(_REGISTRY)
+    return spec
+
+
+def get_design(name: str) -> DesignSpec:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown design {name!r}") from None
 
 
 # ---------------------------------------------------------------------------
@@ -64,15 +169,7 @@ DESIGNS = ("ugemm", "tugemm", "tubgemm", "bgemm")
 
 def wc_cycles(design: str, bits: int, common_dim: int) -> int:
     """Worst-case cycles for one (n x n x common_dim) GEMM on the unit."""
-    if design == "bgemm":
-        return common_dim
-    if design == "ugemm":
-        return 2**bits
-    if design == "tugemm":
-        return common_dim * (2 ** (bits - 1)) ** 2
-    if design == "tubgemm":
-        return common_dim * 2 ** (bits - 2)
-    raise ValueError(f"unknown design {design!r}")
+    return get_design(design).wc_cycles_fn(bits, common_dim)
 
 
 def dynamic_cycles_from_sparsity(design: str, bits: int, common_dim: int,
@@ -83,7 +180,7 @@ def dynamic_cycles_from_sparsity(design: str, bits: int, common_dim: int,
     bGEMM run at worst case regardless of operand values.
     """
     wc = wc_cycles(design, bits, common_dim)
-    if design in ("tugemm", "tubgemm"):
+    if get_design(design).sparsity_aware:
         return wc * (1.0 - float(bit_sparsity))
     return float(wc)
 
@@ -100,14 +197,22 @@ def dynamic_cycles_from_operand(design: str, bits: int, q_weights) -> float:
     if q.ndim == 1:
         q = q[:, None]
     k = q.shape[0]
+    spec = get_design(design)
+    if spec.dyn_operand_fn is None:
+        return float(spec.wc_cycles_fn(bits, k))
     step_max = jnp.max(jnp.abs(q), axis=tuple(range(1, q.ndim)))  # (K,)
-    if design == "tugemm":
-        per_step = (2 ** (bits - 1)) * step_max  # outer stream gates inner full pass
-        return float(jnp.sum(per_step))
-    if design == "tubgemm":
-        per_step = jnp.ceil(step_max / 2.0)  # 2-unary stream slots actually used
-        return float(jnp.sum(jnp.maximum(per_step, 1)))
-    return float(wc_cycles(design, bits, k))
+    return float(spec.dyn_operand_fn(bits, step_max))
+
+
+def _tugemm_dyn(bits: int, step_max: jax.Array) -> jax.Array:
+    # outer stream gates inner full pass
+    return jnp.sum((2 ** (bits - 1)) * step_max)
+
+
+def _tubgemm_dyn(bits: int, step_max: jax.Array) -> jax.Array:
+    # 2-unary stream slots actually used
+    per_step = jnp.ceil(step_max / 2.0)
+    return jnp.sum(jnp.maximum(per_step, 1))
 
 
 # ---------------------------------------------------------------------------
@@ -175,17 +280,85 @@ def ugemm_exact(a: jax.Array, b: jax.Array, bits: int = 8) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# Cycle-accurate stream simulators (small shapes; tests prove equivalence)
+# Cycle-accurate stream simulators — slot-parallel vectorized engine
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("bits",))
 def tugemm_stream(a: jax.Array, b: jax.Array, bits: int):
-    """Counter-based fully-temporal GEMM.
+    """Counter-based fully-temporal GEMM, slot-parallel form.
 
-    Hardware view: for each outer-product step k, stream a's temporal bits; for
-    every 1-slot of a, replay b's full temporal stream into per-output counters.
+    Hardware view: for each outer-product step k, stream a's temporal bits;
+    for every 1-slot of a, replay b's full temporal stream into per-output
+    counters.  The einsum below contracts both slot axes and K at once: slot
+    pair (i, j) of step k contributes ``pulse_a[i] * pulse_b[j] * sign`` —
+    exactly the counter increments the sequential scan applies one at a time.
     cycles(WC) = K * L^2 with L = 2^(w-1) slot budget.  Returns (out, cycles).
     """
+    L = unary.temporal_stream_len(bits)
+    stream_a, sign_a = unary.encode_temporal(a, bits)   # (L, M, K), (M, K)
+    stream_b, sign_b = unary.encode_temporal(b, bits)   # (L, K, N), (K, N)
+    pa = stream_a * sign_a[None]
+    pb = stream_b * sign_b[None]
+    out = jnp.einsum("imk,jkn->mn", pa, pb,
+                     preferred_element_type=jnp.int32).astype(jnp.int32)
+    return out, a.shape[1] * L * L
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def tubgemm_stream(a: jax.Array, b: jax.Array, bits: int):
+    """Temporal-unary (a, 2-unary) x binary (b) hybrid GEMM, slot-parallel.
+
+    Hardware view: per outer-product step k, a's magnitude streams in 2-unary
+    (L2 = 2^(w-2) slots, each slot worth 2), with the odd bit folded into slot
+    0; b stays binary and is conditionally added into accumulators every slot.
+    The (slot, M, K) weight train below is that schedule verbatim; the einsum
+    sums slot contributions the way the accumulator bank does.
+    cycles(WC) = K * L2.  Returns (out, cycles).
+    """
+    L2 = unary.tub_stream_len(bits)
+    stream2, lsb, sign = unary.encode_tub(a, bits)      # (L2, M, K), (M, K), (M, K)
+    weights = 2 * stream2
+    weights = weights.at[0].add(lsb)                    # odd bit rides slot 0
+    weights = weights * sign[None]
+    out = jnp.einsum("tmk,kn->mn", weights, b.astype(jnp.int32),
+                     preferred_element_type=jnp.int32).astype(jnp.int32)
+    return out, a.shape[1] * L2
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def ugemm_stream(a: jax.Array, b: jax.Array, bits: int):
+    """Unified-unary stochastic GEMM (uGEMM-style) simulator, slot-parallel.
+
+    Port A streams temporal, port B streams rate (see ``_unified_streams``);
+    slot-wise AND multipliers feed signed parallel adder trees (binary
+    counters — accumulation over K is exact, only the multiply is stochastic).
+    The signed pulse trains are kept in float32 so the (t, k) contraction
+    takes the BLAS path (int32 matmul has no fast CPU kernel): every summand
+    is in {-1, 0, 1} and every partial count is an exact integer < 2^24, so
+    fp32 accumulation is exact in any order — bit-identical to both the int
+    counters and the fp32 scan reference (valid while L * K < 2^24).
+    Returns (float estimate, cycles = 2^w).
+    """
+    temporal, rate, L = _unified_streams(bits)
+    V = vmax(bits)
+    pa = jnp.abs(a.astype(jnp.int32)).astype(jnp.float32) / V
+    pb = jnp.abs(b.astype(jnp.int32)).astype(jnp.float32) / V
+    at = ((temporal[:, None, None] < pa[None]).astype(jnp.float32)
+          * jnp.sign(a.astype(jnp.float32))[None])      # (L, M, K)
+    bt = ((rate[:, None, None] < pb[None]).astype(jnp.float32)
+          * jnp.sign(b.astype(jnp.float32))[None])      # (L, K, N)
+    counts = jnp.einsum("tmk,tkn->mn", at, bt)
+    return counts * (V * V / L), L
+
+
+# ---------------------------------------------------------------------------
+# Sequential scan references (the seed implementations, kept as the
+# semantic ground truth the vectorized engine is tested against)
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("bits",))
+def tugemm_stream_scan(a: jax.Array, b: jax.Array, bits: int):
+    """One-slot-per-step scan reference for :func:`tugemm_stream`."""
     L = 2 ** (bits - 1)  # slot budget the paper's latency formula uses
     ia = jnp.abs(a.astype(jnp.int32))
     ib = jnp.abs(b.astype(jnp.int32))
@@ -218,14 +391,8 @@ def tugemm_stream(a: jax.Array, b: jax.Array, bits: int):
 
 
 @partial(jax.jit, static_argnames=("bits",))
-def tubgemm_stream(a: jax.Array, b: jax.Array, bits: int):
-    """Temporal-unary (a, 2-unary) x binary (b) hybrid GEMM.
-
-    Hardware view: per outer-product step k, a's magnitude streams in 2-unary
-    (L2 = 2^(w-2) slots, each slot worth 2), with the odd bit folded into slot
-    0; b stays binary and is conditionally added into accumulators every slot.
-    cycles(WC) = K * L2.  Returns (out, cycles).
-    """
+def tubgemm_stream_scan(a: jax.Array, b: jax.Array, bits: int):
+    """One-slot-per-step scan reference for :func:`tubgemm_stream`."""
     L2 = max(1, 2 ** (bits - 2))
     ia = jnp.abs(a.astype(jnp.int32))
     sa = jnp.sign(a.astype(jnp.int32))
@@ -252,14 +419,8 @@ def tubgemm_stream(a: jax.Array, b: jax.Array, bits: int):
 
 
 @partial(jax.jit, static_argnames=("bits",))
-def ugemm_stream(a: jax.Array, b: jax.Array, bits: int):
-    """Unified-unary stochastic GEMM (uGEMM-style) stream simulator.
-
-    Port A streams temporal, port B streams rate (see ``_unified_streams``);
-    slot-wise AND multipliers feed signed parallel adder trees (binary
-    counters — accumulation over K is exact, only the multiply is stochastic).
-    Returns (float estimate, cycles = 2^w).
-    """
+def ugemm_stream_scan(a: jax.Array, b: jax.Array, bits: int):
+    """One-slot-per-step scan reference for :func:`ugemm_stream`."""
     temporal, rate, L = _unified_streams(bits)
     V = vmax(bits)
     pa = jnp.abs(a.astype(jnp.int32)).astype(jnp.float32) / V
@@ -283,12 +444,66 @@ def ugemm_stream(a: jax.Array, b: jax.Array, bits: int):
 
 def gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8) -> jax.Array:
     """Fast functional GEMM under the chosen unit design."""
-    if design == "bgemm":
-        return bgemm_exact(a, b)
-    if design == "tugemm":
-        return tugemm_exact(a, b)
-    if design == "tubgemm":
-        return tubgemm_exact(a, b)
-    if design == "ugemm":
-        return ugemm_exact(a, b, bits=bits)
-    raise ValueError(f"unknown design {design!r}")
+    return get_design(design).exact_fn(a, b, bits)
+
+
+def stream_gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8):
+    """Cycle-faithful stream simulation; returns ``(out, cycles)``."""
+    return get_design(design).stream_fn(a, b, bits)
+
+
+@partial(jax.jit, static_argnames=("design", "bits"))
+def gemm_batched(design: str, a: jax.Array, b: jax.Array,
+                 bits: int = 8) -> jax.Array:
+    """Batched fast functional GEMM: one jit over a stack of problems.
+
+    ``a``: (B, M, K) (or (M, K), which falls through to :func:`gemm`);
+    ``b``: (B, K, N) per-problem operands, or (K, N) shared across the batch
+    (the weight-stationary serving case).  Sweeps over matrix sizes /
+    bit-widths stack same-shaped problems on the batch axis and call this
+    once per (design, bits) — benchmarks/run.py and launch/serve.py drive it.
+    """
+    spec = get_design(design)
+    if a.ndim == 2:
+        return spec.exact_fn(a, b, bits)
+    if a.ndim != 3:
+        raise ValueError(f"gemm_batched wants (B, M, K) operands, got {a.shape}")
+    fn = lambda x, y: spec.exact_fn(x, y, bits)  # noqa: E731
+    return jax.vmap(fn, in_axes=(0, 0 if b.ndim == 3 else None))(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Built-in designs (paper §II)
+# ---------------------------------------------------------------------------
+
+register_design(
+    "ugemm",
+    exact_fn=lambda a, b, bits: ugemm_exact(a, b, bits=bits),
+    stream_fn=lambda a, b, bits: ugemm_stream(a, b, bits),
+    wc_cycles_fn=lambda bits, common_dim: 2 ** bits,
+)
+
+register_design(
+    "tugemm",
+    exact_fn=lambda a, b, bits: tugemm_exact(a, b),
+    stream_fn=lambda a, b, bits: tugemm_stream(a, b, bits),
+    wc_cycles_fn=lambda bits, common_dim: common_dim * (2 ** (bits - 1)) ** 2,
+    sparsity_aware=True,
+    dyn_operand_fn=_tugemm_dyn,
+)
+
+register_design(
+    "tubgemm",
+    exact_fn=lambda a, b, bits: tubgemm_exact(a, b),
+    stream_fn=lambda a, b, bits: tubgemm_stream(a, b, bits),
+    wc_cycles_fn=lambda bits, common_dim: common_dim * 2 ** (bits - 2),
+    sparsity_aware=True,
+    dyn_operand_fn=_tubgemm_dyn,
+)
+
+register_design(
+    "bgemm",
+    exact_fn=lambda a, b, bits: bgemm_exact(a, b),
+    stream_fn=lambda a, b, bits: (bgemm_exact(a, b), a.shape[1]),
+    wc_cycles_fn=lambda bits, common_dim: common_dim,
+)

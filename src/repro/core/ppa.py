@@ -104,6 +104,11 @@ _POWER_FIT = {d: _fit(POWER_MW, d) for d in DESIGNS}
 
 
 def _lookup(table, fit, design: str, bits: int, n: int) -> float:
+    if design not in fit:
+        # registered-but-uncalibrated designs (gemm_sims.register_design)
+        # can simulate GEMMs, but pricing needs paper synthesis data
+        raise ValueError(f"no PPA calibration for design {design!r}; "
+                         f"paper tables cover {tuple(fit)}")
     key = (bits, n)
     if key in table:
         return table[key][design]

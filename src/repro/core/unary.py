@@ -118,12 +118,23 @@ def van_der_corput(n: int) -> jax.Array:
     return v.astype(jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32) / jnp.float32(2**32)
 
 
-@partial(jax.jit, static_argnames=("bits", "phase"))
-def encode_rate(q: jax.Array, bits: int, phase: int = 0) -> tuple[jax.Array, jax.Array]:
+@partial(jax.jit, static_argnames=("bits", "phase", "reflect"))
+def encode_rate(q: jax.Array, bits: int, phase: int = 0,
+                reflect: bool = False) -> tuple[jax.Array, jax.Array]:
     """q -> (rate stream[2^w, ...], sign[...]).
 
-    ``phase`` rotates the comparator sequence so two operands of a multiply use
-    decorrelated streams (uGEMM pairs different LD sequences per input port).
+    Two *independent* per-port decorrelation knobs (uGEMM pairs different LD
+    comparator sequences per input port):
+
+    * ``phase`` rotates the comparator sequence by that many slots.  The slot
+      *order* changes but the value multiset does not, so the 1s-count — and
+      hence :func:`decode_rate` — is phase-invariant.
+    * ``reflect`` mirrors the sequence (``1 - seq``), the second-port trick;
+      it perturbs the count by at most one slot.
+
+    Both may be combined for a third decorrelated port.  (An earlier revision
+    silently applied *both* whenever ``phase`` was nonzero, contradicting this
+    docstring — the modes are now explicit and separately testable.)
     """
     L = rate_stream_len(bits)
     mag = jnp.abs(q.astype(jnp.int32))
@@ -131,7 +142,7 @@ def encode_rate(q: jax.Array, bits: int, phase: int = 0) -> tuple[jax.Array, jax
     seq = van_der_corput(L)
     if phase:
         seq = jnp.roll(seq, phase)
-        # Decorrelate further: reflect the sequence for the second port.
+    if reflect:
         seq = 1.0 - seq
     seq = seq.reshape((-1,) + (1,) * q.ndim)
     stream = (seq < p[None]).astype(jnp.int32)

@@ -1,11 +1,12 @@
 """Pallas TPU kernels for the perf-critical compute (quantized GEMM, sparsity).
 
 - quant_gemm   : tiled int8/int4/int2 matmul, VMEM BlockSpec tiling, MXU dot
+- unary_gemm   : tubGEMM's 2-unary slot loop as a tiled on-device kernel
 - bitsparsity  : per-PE-tile block-max / zero-count reduction (Eq. 1 stats)
 - ops          : public jit'd wrappers (pack, quantized_matmul, stats)
 - ref          : pure-jnp oracles the tests sweep against
 """
 
-from repro.kernels import bitsparsity, ops, quant_gemm, ref
+from repro.kernels import bitsparsity, ops, quant_gemm, ref, unary_gemm
 
-__all__ = ["bitsparsity", "ops", "quant_gemm", "ref"]
+__all__ = ["bitsparsity", "ops", "quant_gemm", "ref", "unary_gemm"]

@@ -16,12 +16,14 @@ import jax.numpy as jnp
 from repro.core.quantization import Quantized, quantize, vmax
 from repro.kernels import bitsparsity as _bs
 from repro.kernels import quant_gemm as _qg
+from repro.kernels import unary_gemm as _ug
 
 __all__ = [
     "on_tpu",
     "pack_values",
     "quantized_matmul",
     "int_matmul",
+    "tub_matmul",
     "bit_sparsity_stats",
 ]
 
@@ -59,6 +61,19 @@ def int_matmul(x_q: jax.Array, w_packed: jax.Array, *, bits: int = 8,
     interp = _interpret_default() if interpret is None else interpret
     return _qg.quant_gemm(x_q, w_packed, None, bits=bits, block=block,
                           fuse_dequant=False, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def tub_matmul(a_q: jax.Array, b_q: jax.Array, *, bits: int = 8,
+               block=_ug.DEFAULT_BLOCK, interpret: bool | None = None):
+    """tubGEMM slot-loop GEMM on the Pallas kernel.
+
+    ``a_q`` is (M, K) w-bit codes, ``b_q`` (K, N) int8.  Returns
+    ``((M, N) int32, wc_cycles)`` — bit-identical to binary GEMM, scheduled
+    as the paper's 2-unary unit.
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    return _ug.tub_gemm(a_q, b_q, bits=bits, block=block, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "act_bits", "block", "interpret"))

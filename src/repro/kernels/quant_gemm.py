@@ -141,9 +141,12 @@ def quant_gemm(x: jax.Array, w_packed: jax.Array, scales: jax.Array | None = Non
 
 
 def _acc_scratch(bm: int, bn: int):
-    # pltpu.VMEM on TPU; plain pallas scratch elsewhere/interpret.
+    # pltpu.VMEM when the TPU plugin imports (it also drives interpret mode on
+    # CPU); otherwise a backend-neutral MemoryRef.  MemorySpace members are
+    # plain enum values, not scratch-shape constructors — the previous
+    # ``pl.MemorySpace.ANY((bm, bn), ...)`` fallback raised TypeError.
     try:  # pragma: no cover - TPU path
         from jax.experimental.pallas import tpu as pltpu
         return pltpu.VMEM((bm, bn), jnp.int32)
     except Exception:  # pragma: no cover
-        return pl.MemorySpace.ANY((bm, bn), jnp.int32)
+        return pl.MemoryRef((bm, bn), jnp.int32, pl.MemorySpace.ANY)

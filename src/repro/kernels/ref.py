@@ -13,6 +13,7 @@ import jax.numpy as jnp
 __all__ = [
     "unpack_values_ref",
     "quant_gemm_ref",
+    "tub_gemm_ref",
     "block_stats_ref",
     "bit_sparsity_stats_ref",
 ]
@@ -45,6 +46,25 @@ def quant_gemm_ref(x: jax.Array, w_packed: jax.Array,
         s = jnp.ones((1, out.shape[1]), jnp.float32) if scales is None else scales
         return out.astype(jnp.float32) * s.reshape(1, -1)
     return out
+
+
+def tub_gemm_ref(a: jax.Array, b: jax.Array, *, bits: int = 8) -> jax.Array:
+    """Slot-by-slot mirror of the tubGEMM kernel's 2-unary schedule.
+
+    Builds the (L2, M, K) weight train — weight-2 gated slots plus the odd
+    bit on slot 0, times the sign — and sums slot contributions, exactly what
+    the kernel's ``fori_loop`` accumulates.  Equal to int32 GEMM by the
+    paper's equivalence argument.
+    """
+    a32 = a.astype(jnp.int32)
+    mag, sgn = jnp.abs(a32), jnp.sign(a32)
+    v1, v0 = mag // 2, mag % 2
+    slots = jnp.arange(max(1, 2 ** (bits - 2)), dtype=jnp.int32)
+    gates = 2 * (slots[:, None, None] < v1[None]).astype(jnp.int32)
+    gates = gates.at[0].add(v0)
+    weights = gates * sgn[None]                              # (L2, M, K)
+    return jnp.einsum("tmk,kn->mn", weights, b.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
 
 
 def block_stats_ref(q: jax.Array, tile: int = 32):

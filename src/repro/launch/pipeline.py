@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 __all__ = ["pipeline_apply", "split_stages"]
 
 
@@ -74,7 +76,7 @@ def pipeline_apply(stage_fn: Callable, staged_params, x, mesh,
         # outputs live on the last pod only; sum-replicate across stages
         return lax.psum(outs, axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         block, mesh=mesh,
         in_specs=(P(axis), P()),
         out_specs=P(),

@@ -21,6 +21,8 @@ import numpy as np
 
 from repro import configs
 from repro.core import accounting, sparsity
+from repro.core import gemm_sims as gemm_sims_lib
+from repro.core.quantization import quantize
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import single_device_mesh
 from repro.models import model as model_lib
@@ -45,6 +47,37 @@ def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
         rec.record(name, m=batch, k=k, n_out=n_out,
                    bit_sparsity=st.bit_blockmax, count=1)
     return rec, stats
+
+
+def validate_backend_numerics(params, design: str, bits: int,
+                              n_tiles: int = 8, tile: int = 16) -> float:
+    """Spot-check the selected GEMM backend on tiles of the real weights.
+
+    Quantizes ``n_tiles`` (tile x tile) slices of actual model weights,
+    stacks them on a batch axis, and pushes the whole stack through
+    ``gemm_sims.gemm_batched`` in one jit against the binary oracle.  Exact
+    designs (tu/tub/b) must come back bit-identical; uGEMM reports its
+    stochastic relative RMSE.  Returns the relative error.
+    """
+    leaves = [l for l in jax.tree_util.tree_leaves(params)
+              if hasattr(l, "ndim") and l.ndim >= 2 and l.size >= 2 * tile * tile]
+    if not leaves:
+        return 0.0
+    tiles = []
+    for i in range(2 * n_tiles):
+        flat = np.asarray(leaves[i % len(leaves)], np.float32).reshape(-1)
+        off = (i // len(leaves)) * tile * tile
+        chunk = flat[off:off + tile * tile]
+        if chunk.size < tile * tile:
+            chunk = flat[:tile * tile]
+        q = quantize(jnp.asarray(chunk.reshape(tile, tile)), bits=bits,
+                     per_channel=False)
+        tiles.append(q.values.astype(jnp.int8))
+    a = jnp.stack(tiles[:n_tiles])
+    b = jnp.stack(tiles[n_tiles:])
+    return gemm_sims_lib.rel_rmse(
+        gemm_sims_lib.gemm_batched(design, a, b, bits),
+        gemm_sims_lib.gemm_batched("bgemm", a, b, bits))
 
 
 def generate(cfg, params, mesh, prompt, max_new: int, temperature: float = 0.0):
@@ -102,6 +135,12 @@ def main() -> int:
     wall = time.time() - t0
     print(f"generated {toks.shape} tokens in {wall:.2f}s "
           f"({args.batch * args.tokens / wall:.1f} tok/s on CPU sim)")
+
+    # --- backend numerics: batched engine vs binary oracle on real weights ---
+    rel = validate_backend_numerics(params, args.gemm_backend, args.bits)
+    tag = "bit-exact" if rel == 0.0 else f"relRMSE {rel:.2e}"
+    print(f"backend numerics ({args.gemm_backend}, {args.bits}-bit, "
+          f"batched weight tiles): {tag}")
 
     # --- unary-DLA energy accounting (the paper's technique, end to end) ---
     rec, stats = build_workload(cfg, params, args.batch, args.prompt_len, args.bits)

@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.models.common import ParamDef, shard
 from repro.models.config import ModelConfig
 from repro.models.mlp import mlp_defs, mlp_fwd
@@ -168,7 +169,7 @@ def _moe_ep_psum(params, x_flat, cfg: ModelConfig, mesh, scoring):
         aux = _aux_loss(probs, topk_idx, cfg)   # identical on every rank
         return out, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         block, mesh=mesh,
         in_specs=(P(), P("model"), P("model"), P("model"), P(baxes)),
         out_specs=(P(baxes), P()),
@@ -239,7 +240,7 @@ def _moe_ep_a2a(params, x_flat, cfg: ModelConfig, mesh, scoring):
         aux = lax.psum(_aux_loss(probs, topk_idx, cfg), "model") / n_model
         return out, aux
 
-    fn = jax.shard_map(
+    fn = shard_map(
         block, mesh=mesh,
         in_specs=(P(), P("model"), P("model"), P("model"), P(baxes)),
         out_specs=(P(baxes), P()),

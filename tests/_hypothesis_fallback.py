@@ -1,0 +1,122 @@
+"""Minimal, dependency-free stand-in for the slice of `hypothesis` these
+tests use (``given`` / ``settings`` / ``strategies``).
+
+The CI image cannot install hypothesis, and four test modules use it for
+light property-based sweeps.  This shim keeps those tests collectable and
+meaningful everywhere: each ``@given`` test runs ``max_examples`` examples
+drawn from a deterministic per-test PRNG (seeded from the test's qualified
+name, so failures reproduce).  When real hypothesis is available the test
+modules import it instead and this file is inert.
+
+Only the surface actually used in this repo is implemented:
+
+    st.sampled_from(seq)   st.integers(lo, hi)   st.floats(lo, hi)
+    @given(**kwargs)       @settings(max_examples=..., deadline=...)
+
+No shrinking, no database, no assume/note — a failing example's kwargs are
+attached to the assertion message instead.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+__all__ = ["given", "settings", "strategies", "st"]
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class SearchStrategy:
+    """A draw function plus a repr for failure messages."""
+
+    def __init__(self, draw, label: str):
+        self._draw = draw
+        self._label = label
+
+    def draw(self, rnd: random.Random):
+        return self._draw(rnd)
+
+    def __repr__(self) -> str:  # pragma: no cover - cosmetic
+        return self._label
+
+
+class strategies:
+    """Namespace mirroring ``hypothesis.strategies`` (the used subset)."""
+
+    @staticmethod
+    def sampled_from(elements) -> SearchStrategy:
+        pool = list(elements)
+        if not pool:
+            raise ValueError("sampled_from needs a non-empty collection")
+        return SearchStrategy(lambda r: r.choice(pool),
+                              f"sampled_from({pool!r})")
+
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> SearchStrategy:
+        return SearchStrategy(lambda r: r.randint(min_value, max_value),
+                              f"integers({min_value}, {max_value})")
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> SearchStrategy:
+        def draw(r: random.Random) -> float:
+            # hit the endpoints occasionally — they are the usual bug nests
+            roll = r.random()
+            if roll < 0.05:
+                return float(min_value)
+            if roll < 0.10:
+                return float(max_value)
+            return r.uniform(min_value, max_value)
+        return SearchStrategy(draw, f"floats({min_value}, {max_value})")
+
+    @staticmethod
+    def booleans() -> SearchStrategy:
+        return SearchStrategy(lambda r: bool(r.getrandbits(1)), "booleans()")
+
+
+st = strategies
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    """Record ``max_examples``; ``deadline`` and the rest are accepted no-ops."""
+
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Run the test once per drawn example, deterministically seeded."""
+    for name, s in strats.items():
+        if not isinstance(s, SearchStrategy):
+            raise TypeError(f"@given kwarg {name!r} is not a strategy: {s!r}")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples",
+                        _DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+            rnd = random.Random(seed)
+            for i in range(n):
+                drawn = {k: strats[k].draw(rnd) for k in sorted(strats)}
+                try:
+                    fn(*args, **drawn, **kwargs)
+                except Exception as e:  # noqa: BLE001 - re-raise with context
+                    raise AssertionError(
+                        f"falsifying example {i + 1}/{n}: {drawn!r}") from e
+
+        # pytest resolves undeclared params as fixtures; hide the strategy
+        # kwargs (which we inject) from the visible signature, and drop
+        # __wrapped__ so inspect doesn't tunnel back to the original.
+        del wrapper.__wrapped__
+        sig = inspect.signature(fn)
+        kept = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=kept)
+        return wrapper
+
+    return deco

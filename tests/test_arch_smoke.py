@@ -18,10 +18,24 @@ def key():
     return jax.random.PRNGKey(0)
 
 
+@pytest.fixture(scope="module")
+def arch_setup(key):
+    """(cfg, params) per arch, shared by both smoke tests (params are
+    immutable jax trees; init is seconds per arch and was paid twice)."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = configs.get_smoke_config(arch)
+            cache[arch] = (cfg, M.init_params(cfg, key))
+        return cache[arch]
+
+    return get
+
+
 @pytest.mark.parametrize("arch", ARCHS)
-def test_smoke_forward_and_train_step(arch, key, rng):
-    cfg = configs.get_smoke_config(arch)
-    params = M.init_params(cfg, key)
+def test_smoke_forward_and_train_step(arch, arch_setup, rng):
+    cfg, params = arch_setup(arch)
     B, Sq = 2, 16
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, Sq)), jnp.int32)
     embeds = None
@@ -39,7 +53,10 @@ def test_smoke_forward_and_train_step(arch, key, rng):
                          toks[:, 1:],
                          embeds=None if embeds is None else embeds[:, :-1])[0]
 
-    loss, grads = jax.value_and_grad(loss_of)(params)
+    # jit once and reuse: un-jitted value_and_grad re-traces op-by-op on
+    # every call, which used to dominate the suite's wall clock
+    val_grad = jax.jit(jax.value_and_grad(loss_of))
+    loss, grads = val_grad(params)
     assert np.isfinite(float(loss)), f"{arch}: non-finite loss"
     opt_cfg = AdamWConfig(lr=1e-3)
     opt = adamw_init(params, opt_cfg)
@@ -54,18 +71,17 @@ def test_smoke_forward_and_train_step(arch, key, rng):
     # loss must decrease after a few steps on the same batch (sanity)
     p, o = new_params, new_opt
     for _ in range(3):
-        l2, g = jax.value_and_grad(loss_of)(p)
+        l2, g = val_grad(p)
         p, o, _ = adamw_update(g, o, p, opt_cfg, 1e-3)
-    assert float(loss_of(p)) < float(loss), f"{arch}: loss not decreasing"
+    assert float(val_grad(p)[0]) < float(loss), f"{arch}: loss not decreasing"
 
 
 @pytest.mark.parametrize("arch", ARCHS)
-def test_smoke_decode_consistency(arch, key, rng):
+def test_smoke_decode_consistency(arch, arch_setup, rng):
     """prefill+decode logits match full forward (bf16 tolerance)."""
-    cfg = configs.get_smoke_config(arch)
+    cfg, params = arch_setup(arch)
     if cfg.frontend_stub:
         pytest.skip("frontend-stub archs serve embeddings; covered elsewhere")
-    params = M.init_params(cfg, key)
     B, Sq = 2, 12
     toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, Sq)), jnp.int32)
     logits, _ = M.forward(params, cfg, toks)

@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image has no hypothesis; use the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import gemm_sims as gs
 from repro.core import unary
@@ -52,6 +56,35 @@ class TestEncodings:
         q = rand_ints(rng, bits, (64,))
         b = float(unary.bit_sparsity_of_stream(q, bits, scheme))
         assert 0.0 <= b <= 1.0
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("phase,reflect", [(0, False), (3, False),
+                                               (0, True), (5, True)])
+    def test_rate_roundtrip_decorrelation_modes(self, rng, bits, phase, reflect):
+        """decode(encode) recovers q exactly after rounding, in every mode.
+
+        The comparator values are the L = 2^w multiples of 1/L, so the count
+        error is < Vmax/L = 1/2 - 2^-w < 0.5 codes for the base, rolled, and
+        reflected sequences alike — rounding recovers the code exactly.
+        """
+        q = rand_ints(rng, bits, (32,))
+        stream, sign = unary.encode_rate(q, bits, phase=phase, reflect=reflect)
+        dec = unary.decode_rate(stream, sign, bits)
+        assert bool(jnp.all(jnp.round(dec).astype(jnp.int32) == q))
+
+    def test_rate_phase_and_reflect_are_independent(self, rng):
+        """phase rotates (count-preserving); reflect mirrors (count-shifting)."""
+        q = jnp.asarray(rng.integers(1, vmax(8) + 1, (64,)), jnp.int8)
+        base, _ = unary.encode_rate(q, 8)
+        rolled, _ = unary.encode_rate(q, 8, phase=3)
+        reflected, _ = unary.encode_rate(q, 8, reflect=True)
+        # a pure rotation permutes slots: per-element 1s-count is unchanged
+        assert bool(jnp.all(unary.ones_count(rolled) == unary.ones_count(base)))
+        # but the slot order really did change for some element
+        assert not bool(jnp.all(rolled == base))
+        # reflection drops exactly one slot per nonzero magnitude
+        assert bool(jnp.all(unary.ones_count(reflected)
+                            == unary.ones_count(base) - 1))
 
 
 class TestExactSimulators:
@@ -122,6 +155,123 @@ class TestUGEMM:
             errs[bits] = np.sqrt(np.mean((est - oracle) ** 2)) / \
                 np.sqrt(np.mean(oracle ** 2))
         assert errs[8] < errs[4]
+
+
+class TestVectorizedEngineMatchesScan:
+    """The slot-parallel engine is bit-identical — outputs *and* cycle
+    counts — to the sequential ``lax.scan`` references it replaced."""
+
+    @pytest.mark.parametrize("bits", [2, 3, 4])
+    @pytest.mark.parametrize("shape", [(3, 4, 5), (1, 8, 2), (6, 3, 7)])
+    def test_tugemm_vec_equals_scan(self, rng, bits, shape):
+        m, k, n = shape
+        a, b = rand_ints(rng, bits, (m, k)), rand_ints(rng, bits, (k, n))
+        out_v, cyc_v = gs.tugemm_stream(a, b, bits)
+        out_s, cyc_s = gs.tugemm_stream_scan(a, b, bits)
+        assert out_v.dtype == out_s.dtype
+        assert bool(jnp.all(out_v == out_s))
+        assert int(cyc_v) == int(cyc_s)
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    @pytest.mark.parametrize("shape", [(3, 4, 5), (2, 6, 3), (5, 7, 2)])
+    def test_tubgemm_vec_equals_scan(self, rng, bits, shape):
+        m, k, n = shape
+        a, b = rand_ints(rng, bits, (m, k)), rand_ints(rng, bits, (k, n))
+        out_v, cyc_v = gs.tubgemm_stream(a, b, bits)
+        out_s, cyc_s = gs.tubgemm_stream_scan(a, b, bits)
+        assert out_v.dtype == out_s.dtype
+        assert bool(jnp.all(out_v == out_s))
+        assert int(cyc_v) == int(cyc_s)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("shape", [(5, 12, 7), (2, 9, 3)])
+    def test_ugemm_vec_equals_scan_bitwise(self, rng, bits, shape):
+        """Even the float uGEMM estimate matches bit-for-bit: the AND counts
+        are exact integers in both engines, scaled by the same constant."""
+        m, k, n = shape
+        a, b = rand_ints(rng, bits, (m, k)), rand_ints(rng, bits, (k, n))
+        out_v, cyc_v = gs.ugemm_stream(a, b, bits)
+        out_s, cyc_s = gs.ugemm_stream_scan(a, b, bits)
+        assert np.array_equal(np.asarray(out_v), np.asarray(out_s))
+        assert int(cyc_v) == int(cyc_s) == 2 ** bits
+
+
+class TestDesignRegistry:
+    def test_builtin_designs_registered(self):
+        assert gs.DESIGNS == ("ugemm", "tugemm", "tubgemm", "bgemm")
+        for d in gs.DESIGNS:
+            assert gs.get_design(d).name == d
+
+    def test_unknown_design_raises_everywhere(self, rng):
+        a, b = rand_ints(rng, 4, (2, 3)), rand_ints(rng, 4, (3, 2))
+        for fn in (lambda: gs.gemm("nope", a, b, 4),
+                   lambda: gs.wc_cycles("nope", 4, 8),
+                   lambda: gs.dynamic_cycles_from_sparsity("nope", 4, 8, 0.5),
+                   lambda: gs.stream_gemm("nope", a, b, 4)):
+            with pytest.raises(ValueError, match="unknown design"):
+                fn()
+
+    def test_duplicate_registration_rejected(self):
+        with pytest.raises(ValueError, match="already registered"):
+            gs.register_design("bgemm", gs.get_design("bgemm").exact_fn,
+                               gs.get_design("bgemm").stream_fn,
+                               gs.get_design("bgemm").wc_cycles_fn)
+
+    def test_custom_design_plugs_into_dispatch(self, rng):
+        name = "test_double_bgemm"
+        try:
+            gs.register_design(
+                name,
+                exact_fn=lambda a, b, bits: 2 * gs.bgemm_exact(a, b),
+                stream_fn=lambda a, b, bits: (2 * gs.bgemm_exact(a, b), 42),
+                wc_cycles_fn=lambda bits, common_dim: 7 * common_dim,
+                sparsity_aware=True)
+            a, b = rand_ints(rng, 4, (3, 4)), rand_ints(rng, 4, (4, 2))
+            assert bool(jnp.all(gs.gemm(name, a, b, 4)
+                                == 2 * gs.bgemm_exact(a, b)))
+            assert gs.wc_cycles(name, 4, 8) == 56
+            assert gs.dynamic_cycles_from_sparsity(name, 4, 8, 0.5) == \
+                pytest.approx(28.0)
+            assert name in gs.DESIGNS
+        finally:
+            gs._REGISTRY.pop(name, None)
+            gs.DESIGNS = tuple(gs._REGISTRY)
+
+    def test_stream_gemm_dispatch(self, rng):
+        a, b = rand_ints(rng, 4, (3, 5)), rand_ints(rng, 4, (5, 3))
+        out, cycles = gs.stream_gemm("bgemm", a, b, 4)
+        assert bool(jnp.all(out == gs.bgemm_exact(a, b)))
+        assert int(cycles) == 5
+        out, cycles = gs.stream_gemm("tubgemm", a, b, 4)
+        assert bool(jnp.all(out == gs.bgemm_exact(a, b)))
+        assert int(cycles) == 5 * 4
+
+
+class TestGemmBatched:
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    def test_matches_per_problem_gemm(self, rng, bits):
+        batch, (m, k, n) = 3, (4, 6, 5)
+        a = jnp.stack([rand_ints(rng, bits, (m, k)) for _ in range(batch)])
+        b = jnp.stack([rand_ints(rng, bits, (k, n)) for _ in range(batch)])
+        for design in gs.DESIGNS:
+            out = gs.gemm_batched(design, a, b, bits)
+            assert out.shape == (batch, m, n)
+            for i in range(batch):
+                want = gs.gemm(design, a[i], b[i], bits)
+                assert np.array_equal(np.asarray(out[i]), np.asarray(want))
+
+    def test_shared_weight_operand(self, rng):
+        """(B, M, K) activations against one (K, N) weight — the serving case."""
+        a = jnp.stack([rand_ints(rng, 8, (4, 6)) for _ in range(3)])
+        b = rand_ints(rng, 8, (6, 5))
+        out = gs.gemm_batched("tubgemm", a, b, 8)
+        for i in range(3):
+            assert bool(jnp.all(out[i] == gs.bgemm_exact(a[i], b)))
+
+    def test_unbatched_falls_through(self, rng):
+        a, b = rand_ints(rng, 4, (3, 4)), rand_ints(rng, 4, (4, 3))
+        assert bool(jnp.all(gs.gemm_batched("bgemm", a, b, 4)
+                            == gs.bgemm_exact(a, b)))
 
 
 class TestLatencyModel:

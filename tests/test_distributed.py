@@ -13,6 +13,14 @@ from repro.launch.mesh import single_device_mesh
 from repro.models import model as M
 from repro.optim import AdamWConfig
 
+import conftest
+
+# The persistent compilation cache segfaults on this jax/CPU build when the
+# train/serve loop reloads donated step executables (see tests/conftest.py);
+# run this module with the cache off.
+_no_xla_cache = pytest.fixture(autouse=True, scope="module")(
+    conftest.disable_compilation_cache)
+
 
 @pytest.fixture(scope="module")
 def mesh():

@@ -6,6 +6,7 @@ flash-decoding (GQA + MLA) vs the single-device oracle, expert-parallel MoE
 vs the dense reference, and the int8 compressed all-reduce.
 """
 
+import os
 import subprocess
 import sys
 
@@ -107,10 +108,18 @@ print("INT8_PSUM_OK", rel)
 
 
 def test_multidevice_numerics():
+    # JAX_PLATFORMS=cpu: without it jax tries to initialize the TPU backend
+    # (libtpu is installed in the image) and stalls for minutes before
+    # falling back — the fake-device mesh only needs the CPU platform.
+    # Persistent compilation cache is safe here (isolated process, no data
+    # threads / donated-buffer reloads) and cuts warm reruns to seconds.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": "cpu",
+           "JAX_DISABLE_MOST_OPTIMIZATIONS": "1",
+           "JAX_COMPILATION_CACHE_DIR": os.path.abspath(".jax_cache"),
+           "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": "0"}
     res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                         text=True, timeout=900,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=900, env=env)
     out = res.stdout
     for marker in ("GQA_DECODE_OK", "MLA_DECODE_OK", "MOE_EP_OK",
                    "MOE_A2A_OK", "INT8_PSUM_OK"):

@@ -2,6 +2,7 @@
 equivalence to the sequential reference, on a fake 4-pod mesh (subprocess —
 device count must be pinned before jax initializes)."""
 
+import os
 import subprocess
 import sys
 
@@ -64,8 +65,16 @@ print("PIPELINE_OK")
 
 
 def test_pipeline_forward_and_grad_equivalence():
+    # JAX_PLATFORMS=cpu: without it jax tries to initialize the TPU backend
+    # (libtpu is installed in the image) and stalls for minutes before
+    # falling back — the fake-device mesh only needs the CPU platform.
+    # Persistent compilation cache is safe here (isolated process, no data
+    # threads / donated-buffer reloads) and cuts warm reruns to seconds.
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+           "JAX_PLATFORMS": "cpu",
+           "JAX_DISABLE_MOST_OPTIMIZATIONS": "1",
+           "JAX_COMPILATION_CACHE_DIR": os.path.abspath(".jax_cache"),
+           "JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS": "0"}
     res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
-                         text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-                              "HOME": "/root"})
+                         text=True, timeout=600, env=env)
     assert "PIPELINE_OK" in res.stdout, res.stdout + res.stderr

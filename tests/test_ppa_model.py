@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image has no hypothesis; use the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import ppa
 from repro.core.accounting import GemmCall, GemmWorkloadRecorder, price_workload

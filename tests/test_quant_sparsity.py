@@ -3,7 +3,11 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image has no hypothesis; use the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import sparsity
 from repro.core.quantization import fake_quant, quantize, vmax

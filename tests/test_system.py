@@ -12,6 +12,14 @@ from repro.core import accounting, gemm_sims as gs
 from repro.launch.mesh import single_device_mesh
 from repro.models import model as M
 
+import conftest
+
+# The persistent compilation cache segfaults on this jax/CPU build when the
+# train/serve loop reloads donated step executables (see tests/conftest.py);
+# run this module with the cache off.
+_no_xla_cache = pytest.fixture(autouse=True, scope="module")(
+    conftest.disable_compilation_cache)
+
 
 class TestQuantizedExecution:
     def test_quant_kernel_inference_close_to_float(self, rng):
