@@ -6,7 +6,10 @@ quality metric (max relative error vs the paper's published numbers — 0 means
 an exact reproduction; for benchmarks without published targets it is the
 number of rows produced).
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--details]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--details] [name ...]
+
+Positional ``name`` arguments select a subset of benchmarks (e.g.
+``python -m benchmarks.run sweetspot`` runs only the sweet-spot sweep).
 """
 
 from __future__ import annotations
@@ -28,9 +31,12 @@ def main() -> None:
                     help="include the slow per-arch sparsity profiling sweep")
     ap.add_argument("--details", action="store_true",
                     help="print every table row, not just the CSV summary")
+    ap.add_argument("only", nargs="*", metavar="name",
+                    help="run only the named benchmarks")
     args = ap.parse_args(sys.argv[1:])
 
-    from benchmarks import accuracy_bench, roofline, sparsity_bench, tables
+    from benchmarks import (accuracy_bench, roofline, sparsity_bench,
+                            sweetspot_bench, tables)
 
     benches = [
         ("table1_area", tables.table1_area, {}),
@@ -40,14 +46,21 @@ def main() -> None:
         ("fig2_scaling", tables.fig2_scaling, {}),
         ("fig3_sparsity_energy", tables.fig3_sparsity_energy, {}),
         ("table5_llama2_calibration", sparsity_bench.llama2_calibration, {}),
+        ("sweetspot", sweetspot_bench.sweetspot, {}),
         ("ugemm_accuracy", accuracy_bench.ugemm_accuracy, {}),
         ("unary_engine_sweep", accuracy_bench.unary_engine_sweep, {}),
         ("kernel_micro", accuracy_bench.kernel_micro, {}),
         ("roofline_dryrun", roofline.roofline_rows, {}),
     ]
-    if args.full:
-        benches.append(("table5_arch_sparsity",
-                        sparsity_bench.arch_sparsity_table, {}))
+    gated = ("table5_arch_sparsity", sparsity_bench.arch_sparsity_table, {})
+    if args.full or gated[0] in args.only:   # naming it explicitly selects it
+        benches.append(gated)
+    if args.only:
+        known = {n for n, _, _ in benches}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            ap.error(f"unknown benchmark(s) {unknown}; choose from {sorted(known)}")
+        benches = [b for b in benches if b[0] in args.only]
 
     print("name,us_per_call,derived")
     failures = 0

@@ -157,6 +157,7 @@ def register_design(name: str,
 
 
 def get_design(name: str) -> DesignSpec:
+    """Look up a registered :class:`DesignSpec` by name (ValueError if absent)."""
     try:
         return _REGISTRY[name]
     except KeyError:
@@ -168,7 +169,14 @@ def get_design(name: str) -> DesignSpec:
 # ---------------------------------------------------------------------------
 
 def wc_cycles(design: str, bits: int, common_dim: int) -> int:
-    """Worst-case cycles for one (n x n x common_dim) GEMM on the unit."""
+    """Worst-case cycles for one (n x n x common_dim) GEMM on the unit.
+
+    Args: ``design`` — registered design name; ``bits`` — operand bit-width
+    w; ``common_dim`` — contraction length K the unit streams over.
+    Returns: clock cycles (dimensionless count — multiply by
+    ``ppa.CLOCK_PERIOD_NS`` for ns).  §II formulas: bGEMM K, uGEMM 2^w,
+    tuGEMM K*(2^(w-1))^2, tubGEMM K*2^(w-2).
+    """
     return get_design(design).wc_cycles_fn(bits, common_dim)
 
 
@@ -178,6 +186,10 @@ def dynamic_cycles_from_sparsity(design: str, bits: int, common_dim: int,
 
     Only the temporal designs (tuGEMM, tubGEMM) exploit bit sparsity; uGEMM and
     bGEMM run at worst case regardless of operand values.
+
+    Args: as :func:`wc_cycles` plus ``bit_sparsity`` — fraction of zero slots
+    in the temporal operand's unary stream, in [0, 1).
+    Returns: expected cycles (float; fractional because sparsity is a mean).
     """
     wc = wc_cycles(design, bits, common_dim)
     if get_design(design).sparsity_aware:
@@ -221,18 +233,29 @@ def _tubgemm_dyn(bits: int, step_max: jax.Array) -> jax.Array:
 
 @jax.jit
 def bgemm_exact(a: jax.Array, b: jax.Array) -> jax.Array:
-    """Conventional binary GEMM: the int32 oracle every exact design equals."""
+    """Conventional binary GEMM: the int32 oracle every exact design equals.
+
+    Args: ``a`` (M, K) and ``b`` (K, N) integer matrices (any int dtype
+    holding the quantized codes).  Returns: (M, N) int32 product.
+    """
     return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32),
                       preferred_element_type=jnp.int32)
 
 
 def tugemm_exact(a: jax.Array, b: jax.Array) -> jax.Array:
-    """tuGEMM is deterministic: functional result == integer GEMM."""
+    """tuGEMM is deterministic: functional result == integer GEMM.
+
+    Args/returns: as :func:`bgemm_exact`.  The design's value is its PPA
+    profile (``core.ppa``), not a different numeric answer.
+    """
     return bgemm_exact(a, b)
 
 
 def tubgemm_exact(a: jax.Array, b: jax.Array) -> jax.Array:
-    """tubGEMM is deterministic: functional result == integer GEMM."""
+    """tubGEMM is deterministic: functional result == integer GEMM.
+
+    Args/returns: as :func:`bgemm_exact`.
+    """
     return bgemm_exact(a, b)
 
 
@@ -443,12 +466,23 @@ def ugemm_stream_scan(a: jax.Array, b: jax.Array, bits: int):
 # ---------------------------------------------------------------------------
 
 def gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8) -> jax.Array:
-    """Fast functional GEMM under the chosen unit design."""
+    """Fast functional GEMM under the chosen unit design.
+
+    Args: ``design`` — registered name; ``a`` (M, K) / ``b`` (K, N) quantized
+    int codes; ``bits`` — their bit-width w.
+    Returns: (M, N) output — int32 for the exact designs, float32 estimate
+    for stochastic uGEMM.  No latency is reported; see :func:`stream_gemm`.
+    """
     return get_design(design).exact_fn(a, b, bits)
 
 
 def stream_gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8):
-    """Cycle-faithful stream simulation; returns ``(out, cycles)``."""
+    """Cycle-faithful stream simulation under the chosen unit design.
+
+    Args: as :func:`gemm`.  Returns: ``(out, cycles)`` — the unit's output
+    plus the clock cycles the schedule takes (== ``wc_cycles`` for the
+    worst-case schedules simulated here).
+    """
     return get_design(design).stream_fn(a, b, bits)
 
 

@@ -117,18 +117,37 @@ def _lookup(table, fit, design: str, bits: int, n: int) -> float:
 
 
 def area_um2(design: str, bits: int, n: int) -> float:
-    """Synthesized cell area of an n x n GEMM unit (exact on the paper grid)."""
+    """Synthesized cell area of one n x n GEMM unit.
+
+    Args: ``design`` — calibrated design name (``ugemm``/``tugemm``/
+    ``tubgemm``/``bgemm``); ``bits`` — operand bit-width w; ``n`` — square
+    PE-array size.
+    Returns: area in **um^2** — the exact Table I value on the paper grid,
+    the log-log fit off-grid.  Raises ValueError for uncalibrated designs.
+    """
     return _lookup(AREA_UM2, _AREA_FIT, design, bits, n)
 
 
 def power_mw(design: str, bits: int, n: int) -> float:
-    """Total post-synthesis power (exact on the paper grid)."""
+    """Total post-synthesis power of one n x n GEMM unit.
+
+    Args: as :func:`area_um2`.
+    Returns: power in **mW** (Table II exact on the grid, fit off-grid).
+    """
     return _lookup(POWER_MW, _POWER_FIT, design, bits, n)
 
 
 def latency_ns(design: str, bits: int, common_dim: int,
                bit_sparsity: float = 0.0) -> float:
-    """GEMM latency; Eq. 1 dynamic scaling for the temporal designs."""
+    """Wall-clock latency of one GEMM on the unit.
+
+    Args: ``design``/``bits`` as above; ``common_dim`` — the contraction
+    length K the unit streams over (equals n for the paper's square GEMMs);
+    ``bit_sparsity`` — fraction in [0, 1), Eq. 1 dynamic scaling (only the
+    temporal designs tuGEMM/tubGEMM exploit it; others ignore it).
+    Returns: latency in **ns** = cycles x ``CLOCK_PERIOD_NS`` (2.5 ns @
+    400 MHz).  Not an area/power table lookup — pure cycle model.
+    """
     cyc = wc_cycles(design, bits, common_dim)
     if design in ("tugemm", "tubgemm") and bit_sparsity:
         cyc = cyc * (1.0 - bit_sparsity)
@@ -137,7 +156,13 @@ def latency_ns(design: str, bits: int, common_dim: int,
 
 def energy_nj(design: str, bits: int, n: int, common_dim: int | None = None,
               bit_sparsity: float = 0.0) -> float:
-    """Energy per GEMM; paper Tables III/IV use common_dim = n and b_spa = 0."""
+    """Energy of one GEMM on an n x n unit: power x latency.
+
+    Args: ``n`` — unit size (prices power); ``common_dim`` — contraction
+    length K (prices latency; defaults to n, the paper's Tables III/IV
+    convention); ``bit_sparsity`` — Eq. 1 scaling, 0 for worst case.
+    Returns: energy in **nJ** (P[mW] x t[ns] x 1e-3).
+    """
     N = n if common_dim is None else common_dim
     t_ns = latency_ns(design, bits, N, bit_sparsity)
     # P[mW] * t[ns] = 1e-12 J = 1e-3 nJ
@@ -145,26 +170,46 @@ def energy_nj(design: str, bits: int, n: int, common_dim: int | None = None,
 
 
 def fig2_slope(table: dict, design: str, n: int = 32) -> float:
-    """Paper Fig. 2 'slope': geometric ratio per bitwidth doubling at size n."""
+    """Paper Fig. 2 'slope': geometric ratio per bit-width doubling.
+
+    Args: ``table`` — ``AREA_UM2`` or ``POWER_MW``; ``design`` — design name;
+    ``n`` — size at which the slope is read (paper uses 32).
+    Returns: dimensionless ratio ``sqrt(x(8b) / x(2b))`` — the factor the
+    metric grows per 2b -> 4b -> 8b doubling.
+    """
     lo, hi = table[(2, n)][design], table[(8, n)][design]
     return math.sqrt(hi / lo)
 
 
 def dynamic_energy_nj(design: str, bits: int, n: int, bit_sparsity: float,
                       common_dim: int | None = None) -> float:
-    """Fig. 3 right panel: workload-dependent energy via Eq. 1."""
+    """Fig. 3 right panel: workload-dependent energy via Eq. 1.
+
+    Same args/units as :func:`energy_nj` (returns **nJ**) with
+    ``bit_sparsity`` mandatory — the measured block-max weight sparsity.
+    """
     return energy_nj(design, bits, n, common_dim, bit_sparsity)
 
 
 def adp_mm2_ns(design: str, bits: int, n: int, common_dim: int | None = None) -> float:
-    """Area-Delay Product (Table IV)."""
+    """Area-Delay Product of one GEMM on an n x n unit (Table IV).
+
+    Args: as :func:`energy_nj` (``common_dim`` defaults to n).
+    Returns: ADP in **mm^2 * ns** (area converted um^2 -> mm^2, worst-case
+    latency — the paper tabulates ADP without sparsity scaling).
+    """
     N = n if common_dim is None else common_dim
     return area_um2(design, bits, n) * 1e-6 * latency_ns(design, bits, N)
 
 
 @dataclasses.dataclass(frozen=True)
 class PPAQuery:
-    """Convenience record bundling every metric for one configuration."""
+    """Convenience record bundling every metric for one configuration.
+
+    Fields: ``design`` — calibrated design name; ``bits`` — operand width;
+    ``n`` — square unit size.  Properties return area in mm^2, power in mW,
+    worst-case latency in ns, worst-case energy in nJ and ADP in mm^2*ns.
+    """
 
     design: str
     bits: int
@@ -172,22 +217,27 @@ class PPAQuery:
 
     @property
     def area_mm2(self) -> float:
+        """Unit area in mm^2 (Table I um^2 value x 1e-6)."""
         return area_um2(self.design, self.bits, self.n) * 1e-6
 
     @property
     def power_mw(self) -> float:
+        """Total power in mW (Table II)."""
         return power_mw(self.design, self.bits, self.n)
 
     @property
     def wc_latency_ns(self) -> float:
+        """Worst-case (zero-sparsity) latency in ns, common_dim = n."""
         return latency_ns(self.design, self.bits, self.n)
 
     @property
     def wc_energy_nj(self) -> float:
+        """Worst-case energy in nJ per GEMM, common_dim = n."""
         return energy_nj(self.design, self.bits, self.n)
 
     @property
     def adp(self) -> float:
+        """Area-Delay Product in mm^2*ns (Table IV)."""
         return adp_mm2_ns(self.design, self.bits, self.n)
 
 
@@ -207,20 +257,26 @@ class DLAModel:
     num_units: int = 1
 
     def tiles(self, m: int, n_out: int) -> int:
+        """Number of n x n output tiles a (m, n_out) result decomposes into."""
         return math.ceil(m / self.n) * math.ceil(n_out / self.n)
 
     def matmul_latency_ns(self, m: int, k: int, n_out: int,
                           bit_sparsity: float = 0.0) -> float:
+        """End-to-end (m, k) @ (k, n_out) latency in **ns**: per-tile latency
+        (common_dim = k, Eq. 1 scaled) x ceil(tiles / num_units) waves."""
         per_tile = latency_ns(self.design, self.bits, k, bit_sparsity)
         waves = math.ceil(self.tiles(m, n_out) / self.num_units)
         return per_tile * waves
 
     def matmul_energy_nj(self, m: int, k: int, n_out: int,
                          bit_sparsity: float = 0.0) -> float:
+        """Total matmul energy in **nJ**: per-tile energy x tile count
+        (independent of num_units — parallel units burn the same total)."""
         per_tile = energy_nj(self.design, self.bits, self.n, common_dim=k,
                              bit_sparsity=bit_sparsity)
         return per_tile * self.tiles(m, n_out)
 
     @property
     def total_area_mm2(self) -> float:
+        """Silicon area of the whole unit grid in **mm^2**."""
         return area_um2(self.design, self.bits, self.n) * 1e-6 * self.num_units

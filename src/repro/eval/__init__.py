@@ -1,0 +1,13 @@
+"""Design-space evaluation layer: the paper's §IV sweet-spot analysis as code.
+
+- sweetspot : sweeps bits x matrix size x design over the ``gemm_sims``
+  registry, prices every point with ``core.ppa``, finds per-metric winners
+  and crossover frontiers, and cross-checks simulator cycle models against
+  the Pallas kernels' cycle reports.
+- report    : serializes a sweep to machine-readable JSON and human-readable
+  markdown tables (``benchmarks.run sweetspot`` writes both).
+"""
+
+from repro.eval import report, sweetspot
+
+__all__ = ["report", "sweetspot"]

@@ -1,12 +1,13 @@
 """Pallas TPU kernels for the perf-critical compute (quantized GEMM, sparsity).
 
 - quant_gemm   : tiled int8/int4/int2 matmul, VMEM BlockSpec tiling, MXU dot
-- unary_gemm   : tubGEMM's 2-unary slot loop as a tiled on-device kernel
+- unary_gemm   : tuGEMM / tubGEMM slot loops as tiled on-device kernels
 - bitsparsity  : per-PE-tile block-max / zero-count reduction (Eq. 1 stats)
 - ops          : public jit'd wrappers (pack, quantized_matmul, stats)
 - ref          : pure-jnp oracles the tests sweep against
+- backends     : registers the kernels as gemm_sims registry designs
 """
 
-from repro.kernels import bitsparsity, ops, quant_gemm, ref, unary_gemm
+from repro.kernels import backends, bitsparsity, ops, quant_gemm, ref, unary_gemm
 
-__all__ = ["bitsparsity", "ops", "quant_gemm", "ref", "unary_gemm"]
+__all__ = ["backends", "bitsparsity", "ops", "quant_gemm", "ref", "unary_gemm"]

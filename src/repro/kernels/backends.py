@@ -1,0 +1,84 @@
+"""Register the Pallas unary-GEMM kernels as executable designs.
+
+The ``gemm_sims`` registry dispatches the four *simulated* paper designs; the
+Pallas kernels are the same tuGEMM/tubGEMM schedules executed on-device (or
+under ``interpret=True`` on CPU).  :func:`register_kernel_backends` adds them
+as ``tugemm_pallas`` / ``tubgemm_pallas`` so anything that drives the
+registry — ``gemm``, ``stream_gemm``, the sweet-spot explorer's kernel
+cross-check — can run the kernels through the exact same dispatch surface and
+compare their cycle reports against ``wc_cycles`` of the simulator siblings.
+
+Registration is deliberately *not* done at import time: consumers that
+snapshot ``gemm_sims.DESIGNS`` at import (the paper-table benchmarks, the
+Fig. 2 slope reproduction) iterate exactly the four calibrated designs, and a
+kernel mirror has no synthesis data of its own.  Call this explicitly where
+kernel execution is wanted.  The mirrors inherit their sibling's latency and
+sparsity model (``wc_cycles_fn``, ``dyn_operand_fn``), which is the point:
+one cost model, two execution engines.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+from repro.core import gemm_sims
+
+PALLAS_SUFFIX = "_pallas"
+#: kernel-backed mirror name -> the simulated design it executes
+KERNEL_SIBLINGS = {
+    "tugemm" + PALLAS_SUFFIX: "tugemm",
+    "tubgemm" + PALLAS_SUFFIX: "tubgemm",
+}
+
+
+def register_kernel_backends(*, block=None, interpret: bool | None = None
+                             ) -> tuple[str, ...]:
+    """Idempotently register ``tugemm_pallas`` / ``tubgemm_pallas``.
+
+    Args: ``block`` — optional (bm, bn, bk) kernel tile override; ``interpret``
+    — force Pallas interpret mode (None = auto: interpret off-TPU).
+    Returns: the tuple of registered mirror names.  Safe to call repeatedly
+    (re-registers with ``overwrite=True``).
+    """
+    from repro.kernels import ops
+
+    kernel_fns = {"tugemm": ops.tu_matmul, "tubgemm": ops.tub_matmul}
+    kw: dict = {}
+    if block is not None:
+        kw["block"] = tuple(block)
+    if interpret is not None:
+        kw["interpret"] = interpret
+
+    for name, sibling in KERNEL_SIBLINGS.items():
+        sib = gemm_sims.get_design(sibling)
+        fn = kernel_fns[sibling]
+        gemm_sims.register_design(
+            name,
+            # exact path drops the cycle report; stream path keeps (out, cycles)
+            exact_fn=(lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw)[0]),
+            stream_fn=(lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw)),
+            wc_cycles_fn=sib.wc_cycles_fn,
+            sparsity_aware=sib.sparsity_aware,
+            dyn_operand_fn=sib.dyn_operand_fn,
+            overwrite=True,
+        )
+    return tuple(KERNEL_SIBLINGS)
+
+
+@contextlib.contextmanager
+def kernel_backends(**kwargs):
+    """Scoped registration: the mirrors exist only inside the ``with`` block.
+
+    Snapshots the design registry, runs :func:`register_kernel_backends`
+    (same kwargs), and restores the registry — including any pre-existing
+    ``*_pallas`` registration it overwrote — on exit.  Use this for one-shot
+    consumers (sweeps, cross-checks) so live-``DESIGNS`` iterators elsewhere
+    never observe the uncalibrated mirrors.
+    """
+    saved = dict(gemm_sims._REGISTRY)
+    try:
+        yield register_kernel_backends(**kwargs)
+    finally:
+        gemm_sims._REGISTRY.clear()
+        gemm_sims._REGISTRY.update(saved)
+        gemm_sims.DESIGNS = tuple(saved)

@@ -24,6 +24,7 @@ __all__ = [
     "quantized_matmul",
     "int_matmul",
     "tub_matmul",
+    "tu_matmul",
     "bit_sparsity_stats",
 ]
 
@@ -74,6 +75,19 @@ def tub_matmul(a_q: jax.Array, b_q: jax.Array, *, bits: int = 8,
     """
     interp = _interpret_default() if interpret is None else interpret
     return _ug.tub_gemm(a_q, b_q, bits=bits, block=block, interpret=interp)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block", "interpret"))
+def tu_matmul(a_q: jax.Array, b_q: jax.Array, *, bits: int = 8,
+              block=_ug.DEFAULT_BLOCK, interpret: bool | None = None):
+    """tuGEMM temporal slot-loop GEMM on the Pallas kernel.
+
+    ``a_q`` is (M, K) w-bit codes, ``b_q`` (K, N) int8.  Returns
+    ``((M, N) int32, wc_cycles)`` — bit-identical to binary GEMM, scheduled
+    as the paper's fully-temporal unit (``K * (2^(w-1))^2`` cycles).
+    """
+    interp = _interpret_default() if interpret is None else interpret
+    return _ug.tu_gemm(a_q, b_q, bits=bits, block=block, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("bits", "act_bits", "block", "interpret"))

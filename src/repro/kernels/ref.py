@@ -14,6 +14,7 @@ __all__ = [
     "unpack_values_ref",
     "quant_gemm_ref",
     "tub_gemm_ref",
+    "tu_gemm_ref",
     "block_stats_ref",
     "bit_sparsity_stats_ref",
 ]
@@ -64,6 +65,22 @@ def tub_gemm_ref(a: jax.Array, b: jax.Array, *, bits: int = 8) -> jax.Array:
     gates = gates.at[0].add(v0)
     weights = gates * sgn[None]                              # (L2, M, K)
     return jnp.einsum("tmk,kn->mn", weights, b.astype(jnp.int32),
+                      preferred_element_type=jnp.int32)
+
+
+def tu_gemm_ref(a: jax.Array, b: jax.Array, *, bits: int = 8) -> jax.Array:
+    """Slot-by-slot mirror of the tuGEMM kernel's temporal schedule.
+
+    Builds the (L, M, K) pulse train — slot i fires iff ``i < |a|``, times the
+    sign — and sums each slot's signed add of B, exactly what the kernel's
+    ``fori_loop`` accumulates (B's replayed temporal stream summed by the
+    adder tree).  Equal to int32 GEMM by the paper's equivalence argument.
+    """
+    a32 = a.astype(jnp.int32)
+    mag, sgn = jnp.abs(a32), jnp.sign(a32)
+    slots = jnp.arange(2 ** (bits - 1), dtype=jnp.int32)
+    pulses = (slots[:, None, None] < mag[None]).astype(jnp.int32) * sgn[None]
+    return jnp.einsum("tmk,kn->mn", pulses, b.astype(jnp.int32),
                       preferred_element_type=jnp.int32)
 
 

@@ -23,6 +23,7 @@ from repro import configs
 from repro.core import accounting, sparsity
 from repro.core import gemm_sims as gemm_sims_lib
 from repro.core.quantization import quantize
+from repro.eval import sweetspot as sweetspot_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import single_device_mesh
 from repro.models import model as model_lib
@@ -151,13 +152,30 @@ def main() -> int:
           f"units, {args.bits}-bit):")
     print(f"{'design':>9s} {'wc_energy_uJ':>13s} {'dyn_energy_uJ':>14s} "
           f"{'dyn_latency_us':>15s} {'saving':>7s}")
-    for design in ("ugemm", "tugemm", "tubgemm", "bgemm"):
-        cost = accounting.price_workload(rec.calls, design=design,
-                                         bits=args.bits, unit_n=args.unit_n,
-                                         num_units=args.units)
+    costs = {design: accounting.price_workload(
+                 rec.calls, design=design, bits=args.bits,
+                 unit_n=args.unit_n, num_units=args.units)
+             for design in sweetspot_lib.CALIBRATED_DESIGNS}
+    for design, cost in costs.items():
         mark = " <-- selected" if design == args.gemm_backend else ""
         print(f"{design:>9s} {cost.wc_energy_uj:13.2f} {cost.dyn_energy_uj:14.2f} "
               f"{cost.dyn_latency_us:15.2f} {cost.sparsity_saving:6.1%}{mark}")
+
+    # --- sweet-spot verdict for this model's actual layer shapes ------------
+    rec_by = sweetspot_lib.recommend_backend(
+        rec.calls, bits=args.bits, unit_n=args.unit_n, num_units=args.units,
+        costs=costs)
+    best_e = rec_by["dyn_energy_uj"]["best"]
+    best_l = rec_by["dyn_latency_us"]["best"]
+    print(f"\nsweet-spot ({args.bits}-bit, {args.unit_n}x{args.unit_n} units): "
+          f"{best_e} minimizes energy, {best_l} minimizes latency "
+          f"for this model's layer shapes")
+    if args.gemm_backend not in (best_e, best_l):
+        e_sel = dict(rec_by["dyn_energy_uj"]["ranking"])[args.gemm_backend]
+        e_best = dict(rec_by["dyn_energy_uj"]["ranking"])[best_e]
+        print(f"note: selected backend {args.gemm_backend} spends "
+              f"{e_sel / e_best:.2f}x the energy of {best_e} here "
+              f"(rerun with --gemm-backend {best_e})")
     return 0
 
 

@@ -42,3 +42,24 @@ def disable_compilation_cache():
     jax.config.update("jax_compilation_cache_dir", None)
     yield
     jax.config.update("jax_compilation_cache_dir", old)
+
+
+def restore_design_registry():
+    """Module-scoped generator: snapshot the gemm_sims design registry on
+    entry, restore it on exit.
+
+    Modules that call ``kernels.backends.register_kernel_backends`` (or
+    register ad-hoc designs) use this so the ``tugemm_pallas`` /
+    ``tubgemm_pallas`` mirrors don't leak into later modules — several
+    consumers iterate the *live* ``gemm_sims.DESIGNS`` and expect exactly
+    the four calibrated designs.  Usage:
+
+        _registry = pytest.fixture(autouse=True, scope="module")(
+            conftest.restore_design_registry)
+    """
+    from repro.core import gemm_sims
+    saved = dict(gemm_sims._REGISTRY)
+    yield
+    gemm_sims._REGISTRY.clear()
+    gemm_sims._REGISTRY.update(saved)
+    gemm_sims.DESIGNS = tuple(saved)

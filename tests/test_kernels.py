@@ -9,9 +9,15 @@ try:
 except ModuleNotFoundError:  # CI image has no hypothesis; use the local shim
     from _hypothesis_fallback import given, settings, strategies as st
 
+import conftest
 from repro.core import sparsity
 from repro.core.quantization import quantize, vmax
 from repro.kernels import ops, ref
+
+# TestKernelBackends registers the *_pallas mirrors; don't leak them to
+# later modules that iterate the live gemm_sims.DESIGNS
+_registry = pytest.fixture(autouse=True, scope="module")(
+    conftest.restore_design_registry)
 
 
 def rand_codes(rng, bits, shape):
@@ -137,6 +143,84 @@ class TestUnaryTubGemmKernel:
         b = jnp.ones((4, 4), jnp.int8)
         with pytest.raises(TypeError, match="int8"):
             tub_gemm(a, b, bits=4, interpret=True)
+
+
+class TestUnaryTuGemmKernel:
+    """tuGEMM temporal slot-loop kernel: bit-identical to binary GEMM."""
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    @pytest.mark.parametrize("mkn", [(4, 8, 12), (37, 64, 100), (1, 130, 70)])
+    def test_matches_ref_and_oracle(self, rng, bits, mkn):
+        from repro.core import gemm_sims as gs
+        m, k, n = mkn
+        a = rand_codes(rng, bits, (m, k))
+        b = jnp.asarray(rng.integers(-127, 128, (k, n)), jnp.int8)
+        got, cycles = ops.tu_matmul(a, b, bits=bits, block=(64, 64, 64),
+                                    interpret=True)
+        assert bool(jnp.all(got == ref.tu_gemm_ref(a, b, bits=bits)))
+        assert bool(jnp.all(got == gs.tugemm_exact(a, b)))
+        assert int(cycles) == gs.wc_cycles("tugemm", bits, k)
+
+    @pytest.mark.parametrize("block", [(128, 128, 128), (32, 128, 64)])
+    def test_block_shapes(self, rng, block):
+        from repro.core import gemm_sims as gs
+        a = rand_codes(rng, 4, (96, 192))
+        b = jnp.asarray(rng.integers(-127, 128, (192, 48)), jnp.int8)
+        got, _ = ops.tu_matmul(a, b, bits=4, block=block, interpret=True)
+        assert bool(jnp.all(got == gs.bgemm_exact(a, b)))
+
+    def test_agrees_with_stream_simulator(self, rng):
+        """Kernel and slot-parallel stream sim: same output, same cycles."""
+        from repro.core import gemm_sims as gs
+        a, b = rand_codes(rng, 4, (8, 16)), rand_codes(rng, 4, (16, 8))
+        k_out, k_cyc = ops.tu_matmul(a, b, bits=4, block=(32, 32, 32),
+                                     interpret=True)
+        s_out, s_cyc = gs.tugemm_stream(a, b, 4)
+        assert bool(jnp.all(k_out == s_out))
+        assert int(k_cyc) == int(s_cyc)
+
+    def test_rejects_non_int8(self, rng):
+        from repro.kernels.unary_gemm import tu_gemm
+        a = jnp.ones((4, 4), jnp.int32)
+        b = jnp.ones((4, 4), jnp.int8)
+        with pytest.raises(TypeError, match="int8"):
+            tu_gemm(a, b, bits=4, interpret=True)
+
+
+class TestKernelBackends:
+    """Pallas kernels registered as dispatchable designs in the registry."""
+
+    def test_registration_and_dispatch(self, rng):
+        from repro.core import gemm_sims as gs
+        from repro.kernels import backends
+        names = backends.register_kernel_backends(block=(32, 32, 32),
+                                                  interpret=True)
+        assert set(names) <= set(gs.DESIGNS)
+        a, b = rand_codes(rng, 4, (8, 16)), rand_codes(rng, 4, (16, 8))
+        for name in names:
+            sibling = backends.KERNEL_SIBLINGS[name]
+            k_out, k_cyc = gs.stream_gemm(name, a, b, 4)
+            s_out, s_cyc = gs.stream_gemm(sibling, a, b, 4)
+            assert bool(jnp.all(k_out == s_out))
+            assert int(k_cyc) == int(s_cyc) == gs.wc_cycles(sibling, 4, 16)
+            # exact path drops the cycle report
+            assert bool(jnp.all(gs.gemm(name, a, b, 4) == s_out))
+
+    def test_reregistration_is_idempotent(self):
+        from repro.kernels import backends
+        assert backends.register_kernel_backends() == \
+            backends.register_kernel_backends()
+
+    def test_mirrors_share_cost_model(self):
+        from repro.core import gemm_sims as gs
+        from repro.kernels import backends
+        backends.register_kernel_backends()
+        for name, sibling in backends.KERNEL_SIBLINGS.items():
+            for bits in (2, 4, 8):
+                assert gs.wc_cycles(name, bits, 64) == \
+                    gs.wc_cycles(sibling, bits, 64)
+            assert gs.get_design(name).sparsity_aware == \
+                gs.get_design(sibling).sparsity_aware
 
 
 class TestBitSparsityKernel:

@@ -76,6 +76,44 @@ class TestPaperTables:
             assert p2 < p3 < p4
 
 
+class TestOffgridFit:
+    """The log-log fit pricing the sweet-spot sweep's off-grid points."""
+
+    def test_fit_exact_on_every_grid_point(self):
+        """Grid (bits, n) hits return the published value verbatim — the
+        fit must never be consulted on a calibration point."""
+        for (bits, n), row in ppa.AREA_UM2.items():
+            for design, ref in row.items():
+                assert ppa.area_um2(design, bits, n) == ref
+        for (bits, n), row in ppa.POWER_MW.items():
+            for design, ref in row.items():
+                assert ppa.power_mw(design, bits, n) == ref
+
+    @pytest.mark.parametrize("bits", [2, 3, 4, 8])
+    def test_fit_monotone_in_n(self, bits):
+        """Area and power strictly increase with array size n per design,
+        across a mix of grid-exact and fit-priced points (guards the
+        sweet-spot sweep: a non-monotone fit would fabricate crossovers)."""
+        ns = (16, 24, 32, 48, 64, 96, 128, 192, 256)
+        for d in DESIGNS:
+            for fn in (ppa.area_um2, ppa.power_mw):
+                vals = [fn(d, bits, n) for n in ns]
+                assert all(lo < hi for lo, hi in zip(vals, vals[1:])), \
+                    f"{fn.__name__} not monotone in n for {d} at {bits}b: {vals}"
+
+    def test_fit_monotone_in_bits(self):
+        """At fixed n, widening the datapath never shrinks area or power."""
+        for d in DESIGNS:
+            for n in (16, 32, 64, 128, 256):
+                for fn in (ppa.area_um2, ppa.power_mw):
+                    vals = [fn(d, b, n) for b in (2, 3, 4, 6, 8)]
+                    assert all(lo < hi for lo, hi in zip(vals, vals[1:]))
+
+    def test_uncalibrated_design_raises(self):
+        with pytest.raises(ValueError, match="no PPA calibration"):
+            ppa.area_um2("tugemm_pallas", 4, 64)
+
+
 class TestSparsityEnergy:
     def test_fig3_sparsity_improvements(self):
         """Fig. 3: with CNN-level bit sparsity (~45%), tubGEMM's 2-bit gap

@@ -1,0 +1,145 @@
+"""Sweet-spot explorer: sweep pricing, winners, frontiers, reports, serving."""
+
+import json
+
+import pytest
+
+import conftest
+from repro.core import ppa
+from repro.core.accounting import GemmWorkloadRecorder
+from repro.eval import report as report_lib
+from repro.eval import sweetspot as ss
+
+# kernel_crosscheck scopes its *_pallas registration (backends.kernel_backends
+# restores the registry); this fixture is defense-in-depth should that change
+_registry = pytest.fixture(autouse=True, scope="module")(
+    conftest.restore_design_registry)
+
+
+@pytest.fixture(scope="module")
+def points():
+    return ss.sweep()
+
+
+@pytest.fixture(scope="module")
+def full_report():
+    return ss.build_report(crosscheck=True)
+
+
+class TestSweep:
+    def test_covers_full_cross_product(self, points):
+        keys = {(p.design, p.bits, p.n) for p in points}
+        assert len(points) == len(keys) == \
+            len(ss.CALIBRATED_DESIGNS) * len(ss.DEFAULT_BITS) * len(ss.DEFAULT_SIZES)
+
+    def test_grid_points_exact_vs_paper(self, points):
+        """On-grid sweep values are the published Table I/II numbers."""
+        for p in points:
+            if not p.on_grid:
+                continue
+            assert p.area_um2 == ppa.AREA_UM2[(p.bits, p.n)][p.design]
+            assert p.power_mw == ppa.POWER_MW[(p.bits, p.n)][p.design]
+
+    def test_grid_fidelity(self, points):
+        errs = ss.grid_fidelity(points)
+        assert errs["area_um2"] == 0.0
+        assert errs["power_mw"] == 0.0
+        assert errs["energy_nj"] < 0.01     # paper rounding
+        assert errs["adp_mm2_ns"] < 0.01
+
+    def test_offgrid_flagged(self, points):
+        flags = {(p.bits, p.n): p.on_grid for p in points}
+        assert flags[(4, 64)] and flags[(8, 32)]
+        assert not flags[(2, 64)] and not flags[(8, 256)]
+
+    def test_wc_cycles_attached(self, points):
+        for p in points:
+            if p.design == "tubgemm":
+                assert p.wc_cycles == p.n * 2 ** (p.bits - 2)
+
+
+class TestWinners:
+    def test_every_cell_every_metric_has_winner(self, points):
+        ws = ss.winners(points)
+        cells = len(ss.DEFAULT_BITS) * len(ss.DEFAULT_SIZES)
+        assert len(ws) == cells * len(ss.METRICS)
+        for w in ws:
+            assert w.design in ss.CALIBRATED_DESIGNS
+            assert w.margin >= 1.0
+            assert w.value == min(w.values.values())
+
+    def test_paper_takeaways(self, points):
+        """The sweep reproduces the paper's §IV conclusions."""
+        grid = ss.winner_grid(points)
+        # tuGEMM wins area everywhere
+        assert all(w.design == "tugemm" for w in grid["area_um2"].values())
+        # tubGEMM most energy-efficient at 2-bit, bGEMM at 8-bit
+        for n in ss.DEFAULT_SIZES:
+            assert grid["energy_nj"][(2, n)].design == "tubgemm"
+            assert grid["energy_nj"][(8, n)].design == "bgemm"
+        # the 4-bit energy sweet spot flips to tubGEMM at CloudTPUv3 size
+        assert grid["energy_nj"][(4, 64)].design == "bgemm"
+        assert grid["energy_nj"][(4, 128)].design == "tubgemm"
+
+    def test_crossovers_consistent_with_winners(self, points):
+        grid = ss.winner_grid(points)
+        for c in ss.crossovers(points):
+            assert grid[c.metric][(c.bits, c.n_below)].design == c.from_design
+            assert grid[c.metric][(c.bits, c.n_at)].design == c.to_design
+        # the paper's 4-bit energy crossover is found
+        assert any(c.metric == "energy_nj" and c.bits == 4 and
+                   c.to_design == "tubgemm" and c.n_at == 128
+                   for c in ss.crossovers(points))
+
+
+class TestKernelCrosscheck:
+    def test_kernels_match_simulators_and_cycle_model(self, full_report):
+        assert full_report.kernel_crosscheck, "crosscheck ran"
+        for row in full_report.kernel_crosscheck:
+            assert row["output_ok"], row
+            assert row["cycles_ok"], row
+            assert row["kernel_cycles"] == row["sim_cycles"] == row["wc_cycles"]
+
+    def test_crosscheck_does_not_leak_registry_state(self):
+        """The scoped registration restores gemm_sims.DESIGNS afterwards."""
+        from repro.core import gemm_sims
+        before = gemm_sims.DESIGNS
+        ss.kernel_crosscheck(bits_list=(2,))
+        assert gemm_sims.DESIGNS == before
+
+
+class TestReport:
+    def test_json_roundtrip(self, full_report):
+        doc = json.loads(report_lib.to_json(full_report))
+        assert doc["schema"] == "repro.eval.sweetspot/v1"
+        assert len(doc["points"]) == len(full_report.points)
+        assert {w["metric"] for w in doc["winners"]} == set(ss.METRICS)
+
+    def test_markdown_names_winners(self, full_report):
+        md = report_lib.to_markdown(full_report)
+        for metric in ss.METRICS:
+            assert f"### {metric}" in md
+        assert "tubgemm" in md and "Crossover frontier" in md
+        assert "Pallas kernel cross-check" in md
+
+    def test_write_emits_both_files(self, full_report, tmp_path):
+        json_path, md_path = report_lib.write(full_report, str(tmp_path))
+        assert json.load(open(json_path))["points"]
+        assert "Sweet-spot report" in open(md_path).read()
+
+
+class TestRecommendBackend:
+    def test_picks_cheapest_design_for_workload(self):
+        rec = GemmWorkloadRecorder()
+        rec.record("fc1", m=8, k=256, n_out=512, bit_sparsity=0.3)
+        rec.record("attn", m=8, k=512, n_out=512, bit_sparsity=0.1)
+        out = ss.recommend_backend(rec.calls, bits=4, unit_n=128)
+        for objective, res in out.items():
+            ranking = res["ranking"]
+            assert res["best"] == ranking[0][0]
+            vals = [v for _, v in ranking]
+            assert vals == sorted(vals)
+            assert {d for d, _ in ranking} == set(ss.CALIBRATED_DESIGNS)
+        # 4-bit large-k workload: tubgemm should beat tugemm on energy
+        e = dict(out["dyn_energy_uj"]["ranking"])
+        assert e["tubgemm"] < e["tugemm"]

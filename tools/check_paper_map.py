@@ -1,0 +1,107 @@
+"""Docs check: every code reference in docs/PAPER_MAP.md must resolve.
+
+Two reference syntaxes inside backticks:
+
+* dotted names (``repro.core.ppa.AREA_UM2``, ``benchmarks.tables.table1_area``)
+  — the longest importable module prefix is imported and the remainder is
+  resolved with ``getattr`` (class attributes/methods included);
+* file paths (``src/repro/launch/serve.py``, optionally with a
+  ``::Fragment`` suffix, e.g. ``tests/test_ppa_model.py::test_fig2_slopes``)
+  — the file must exist and contain the fragment text.
+
+Backticked tokens that are neither (formulae, CLI flags, metric labels) are
+ignored.  It also enforces *coverage*: Tables I–V and Figs. 2–3 must each
+have a section.
+
+Usage: ``PYTHONPATH=src python tools/check_paper_map.py [repo_root]``
+Exit status 0 iff everything resolves (this is the CI docs gate, and
+``tests/test_docs.py`` runs the same checker in tier-1).
+"""
+
+from __future__ import annotations
+
+import importlib
+import pathlib
+import re
+import sys
+
+CODE_RE = re.compile(r"`([^`\n]+)`")
+DOTTED_RE = re.compile(r"^(repro|benchmarks|tools|examples)(\.\w+)+$")
+REQUIRED_SECTIONS = ("Table I ", "Table II ", "Table III ", "Table IV ",
+                     "Table V ", "Fig. 2 ", "Fig. 3 ", "Eq. 1 ")
+
+
+def _check_dotted(token: str) -> str | None:
+    """Import the longest module prefix, getattr the rest; None if it resolves."""
+    parts = token.split(".")
+    mod, idx = None, 0
+    for i in range(len(parts), 0, -1):
+        try:
+            mod = importlib.import_module(".".join(parts[:i]))
+            idx = i
+            break
+        except ImportError:
+            continue
+    if mod is None:
+        return f"{token}: no importable module prefix"
+    obj = mod
+    for attr in parts[idx:]:
+        try:
+            obj = getattr(obj, attr)
+        except AttributeError:
+            return f"{token}: {type(obj).__name__} has no attribute {attr!r}"
+    return None
+
+
+def _check_path(root: pathlib.Path, token: str) -> str | None:
+    path_part, _, frag = token.partition("::")
+    p = root / path_part
+    if not p.is_file():
+        return f"{token}: file {path_part} does not exist"
+    if frag and frag not in p.read_text():
+        return f"{token}: {frag!r} not found in {path_part}"
+    return None
+
+
+def check(root: pathlib.Path) -> list[str]:
+    """Return a list of human-readable problems (empty = docs check passes)."""
+    map_path = root / "docs" / "PAPER_MAP.md"
+    if not map_path.is_file():
+        return ["docs/PAPER_MAP.md is missing"]
+    text = map_path.read_text()
+
+    errors = [f"PAPER_MAP.md: no section for {sec.strip()!r}"
+              for sec in REQUIRED_SECTIONS if sec not in text]
+    checked = 0
+    for token in CODE_RE.findall(text):
+        token = token.strip()
+        if "/" in token and ".py" in token and " " not in token:
+            err = _check_path(root, token)
+        elif DOTTED_RE.match(token):
+            err = _check_dotted(token)
+        else:
+            continue  # formula / CLI flag / prose in backticks
+        checked += 1
+        if err:
+            errors.append(err)
+    if checked < 20:
+        errors.append(f"PAPER_MAP.md: only {checked} checkable code references "
+                      "found — map looks gutted")
+    return errors
+
+
+def main(argv: list[str]) -> int:
+    root = pathlib.Path(argv[1]) if len(argv) > 1 else \
+        pathlib.Path(__file__).resolve().parent.parent
+    sys.path.insert(0, str(root))          # benchmarks/, tools/ packages
+    sys.path.insert(0, str(root / "src"))  # repro package
+    errors = check(root)
+    for e in errors:
+        print(f"PAPER_MAP check FAILED: {e}")
+    if not errors:
+        print("PAPER_MAP check OK: all code references resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv))
