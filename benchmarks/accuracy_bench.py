@@ -45,11 +45,14 @@ def ugemm_accuracy():
 def unary_engine_sweep():
     """Design x bit-width sweep through the batched vectorized engine.
 
-    Exercises ``gemm_sims.gemm_batched`` (one jit per design/bit-width over a
-    stacked batch of problems), checks the Pallas tubGEMM slot-loop kernel
-    for bit-identity, and reports the slot-parallel engine's speedup over the
+    Exercises the typed backend objects (``repro.backends.resolve`` +
+    batched ``GemmBackend.execute`` per design/bit-width over a stacked
+    batch of problems), checks the Pallas tubGEMM slot-loop kernel for
+    bit-identity, and reports the slot-parallel engine's speedup over the
     sequential scan reference.
     """
+    from repro import backends
+
     rng = np.random.default_rng(0)
     rows, errs = [], []
     batch, (m, k, n) = 4, (16, 32, 16)
@@ -57,14 +60,15 @@ def unary_engine_sweep():
         v = vmax(bits)
         a = jnp.asarray(rng.integers(-v, v + 1, (batch, m, k)), jnp.int8)
         b = jnp.asarray(rng.integers(-v, v + 1, (batch, k, n)), jnp.int8)
-        oracle = np.asarray(gs.gemm_batched("bgemm", a, b, bits), np.float64)
-        # the four *simulated* designs — not live gs.DESIGNS, which may also
-        # hold the Pallas kernel mirrors once eval/sweetspot registers them
+        oracle = np.asarray(
+            backends.resolve("bgemm", bits=bits).execute(a, b), np.float64)
+        # the four *simulated* designs — not the Pallas kernel mirrors
         for design in paper_gemm.DESIGNS:
-            rel = gs.rel_rmse(gs.gemm_batched(design, a, b, bits), oracle)
+            engine = backends.resolve(design, bits=bits)
+            rel = gs.rel_rmse(engine.execute(a, b), oracle)
             rows.append((f"{design}_{bits}b_batched_relRMSE", rel,
                          None if design == "ugemm" else 0.0))
-            if design != "ugemm":          # exact designs must be bit-identical
+            if engine.exact:               # exact designs must be bit-identical
                 errs.append(0.0 if rel == 0.0 else 1.0)
         got, _ = ops.tub_matmul(a[0], b[0], bits=bits, interpret=True)
         ok = bool(np.array_equal(np.asarray(got), oracle[0]))

@@ -10,13 +10,44 @@ number of rows produced).
 
 Positional ``name`` arguments select a subset of benchmarks (e.g.
 ``python -m benchmarks.run sweetspot`` runs only the sweet-spot sweep).
+An unknown name prints the available benchmarks and exits non-zero before
+anything heavyweight (jax, the benchmark modules) is imported.
 """
 
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import time
+
+# (name, module, function, kwargs) — modules import lazily so selection and
+# unknown-name errors don't pay the jax startup cost.
+BENCH_SPECS: list[tuple[str, str, str, dict]] = [
+    ("table1_area", "benchmarks.tables", "table1_area", {}),
+    ("table2_power", "benchmarks.tables", "table2_power", {}),
+    ("table3_energy", "benchmarks.tables", "table3_energy", {}),
+    ("table4_tpu_sizes", "benchmarks.tables", "table4_tpu_sizes", {}),
+    ("fig2_scaling", "benchmarks.tables", "fig2_scaling", {}),
+    ("fig3_sparsity_energy", "benchmarks.tables", "fig3_sparsity_energy", {}),
+    ("table5_llama2_calibration", "benchmarks.sparsity_bench",
+     "llama2_calibration", {}),
+    ("sweetspot", "benchmarks.sweetspot_bench", "sweetspot", {}),
+    ("ugemm_accuracy", "benchmarks.accuracy_bench", "ugemm_accuracy", {}),
+    ("unary_engine_sweep", "benchmarks.accuracy_bench", "unary_engine_sweep", {}),
+    ("kernel_micro", "benchmarks.accuracy_bench", "kernel_micro", {}),
+    ("roofline_dryrun", "benchmarks.roofline", "roofline_rows", {}),
+]
+# slow per-arch sparsity profiling sweep: --full, or naming it explicitly
+GATED_SPEC = ("table5_arch_sparsity", "benchmarks.sparsity_bench",
+              "arch_sparsity_table", {})
+
+
+def available_benchmarks(full: bool = True) -> list[str]:
+    names = [name for name, _, _, _ in BENCH_SPECS]
+    if full:
+        names.append(GATED_SPEC[0])
+    return names
 
 
 def _timed(fn, *args, **kw):
@@ -25,7 +56,7 @@ def _timed(fn, *args, **kw):
     return rows, err, (time.perf_counter() - t0) * 1e6
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="include the slow per-arch sparsity profiling sweep")
@@ -33,39 +64,27 @@ def main() -> None:
                     help="print every table row, not just the CSV summary")
     ap.add_argument("only", nargs="*", metavar="name",
                     help="run only the named benchmarks")
-    args = ap.parse_args(sys.argv[1:])
+    args = ap.parse_args(sys.argv[1:] if argv is None else argv)
 
-    from benchmarks import (accuracy_bench, roofline, sparsity_bench,
-                            sweetspot_bench, tables)
-
-    benches = [
-        ("table1_area", tables.table1_area, {}),
-        ("table2_power", tables.table2_power, {}),
-        ("table3_energy", tables.table3_energy, {}),
-        ("table4_tpu_sizes", tables.table4_tpu_sizes, {}),
-        ("fig2_scaling", tables.fig2_scaling, {}),
-        ("fig3_sparsity_energy", tables.fig3_sparsity_energy, {}),
-        ("table5_llama2_calibration", sparsity_bench.llama2_calibration, {}),
-        ("sweetspot", sweetspot_bench.sweetspot, {}),
-        ("ugemm_accuracy", accuracy_bench.ugemm_accuracy, {}),
-        ("unary_engine_sweep", accuracy_bench.unary_engine_sweep, {}),
-        ("kernel_micro", accuracy_bench.kernel_micro, {}),
-        ("roofline_dryrun", roofline.roofline_rows, {}),
-    ]
-    gated = ("table5_arch_sparsity", sparsity_bench.arch_sparsity_table, {})
-    if args.full or gated[0] in args.only:   # naming it explicitly selects it
-        benches.append(gated)
+    specs = list(BENCH_SPECS)
+    if args.full or GATED_SPEC[0] in args.only:  # naming it explicitly selects it
+        specs.append(GATED_SPEC)
     if args.only:
-        known = {n for n, _, _ in benches}
-        unknown = [n for n in args.only if n not in known]
+        known = [name for name, _, _, _ in specs]
+        unknown = sorted(set(args.only) - set(known))
         if unknown:
-            ap.error(f"unknown benchmark(s) {unknown}; choose from {sorted(known)}")
-        benches = [b for b in benches if b[0] in args.only]
+            print(f"error: unknown benchmark(s): {', '.join(unknown)}",
+                  file=sys.stderr)
+            print(f"available benchmarks: {', '.join(available_benchmarks())}",
+                  file=sys.stderr)
+            return 2
+        specs = [s for s in specs if s[0] in args.only]
 
     print("name,us_per_call,derived")
     failures = 0
-    for name, fn, kw in benches:
+    for name, module, attr, kw in specs:
         try:
+            fn = getattr(importlib.import_module(module), attr)
             rows, err, us = _timed(fn, **kw)
             derived = err if err is not None else len(rows)
             print(f"{name},{us:.0f},{derived:.6f}")
@@ -76,9 +95,8 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures += 1
             print(f"{name},NaN,FAILED:{e}")
-    if failures:
-        sys.exit(1)
+    return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -1,0 +1,37 @@
+"""First-class GEMM backend API: typed, scoped backend objects.
+
+One import surface for everything backend-shaped:
+
+    from repro import backends
+
+    b = backends.resolve("tubgemm", bits=4)        # typed, immutable
+    out = b.execute(a_q, w_q)                      # run the int GEMM
+    out, cyc = b.stream(a_q, w_q)                  # cycle-faithful sim/kernel
+    cost = b.price(recorder.calls, unit_n=128)     # whole-model PPA
+    with backends.use_backend(b):                  # execute the *model* on it
+        logits, _ = model.forward(params, cfg, tokens)
+
+See ``docs/BACKENDS.md`` for the protocol, resolve rules, scoping semantics
+and the migration table from the deprecated string-registry calls.
+"""
+
+from repro.backends.base import GemmBackend
+from repro.backends.registry import (KERNEL_SIBLINGS, PALLAS_SUFFIX,
+                                     available, mirror_design_spec, resolve)
+from repro.backends.runtime import (BackendExecution, ExecutedGemm,
+                                    active_backend, active_execution,
+                                    use_backend)
+
+__all__ = [
+    "GemmBackend",
+    "KERNEL_SIBLINGS",
+    "PALLAS_SUFFIX",
+    "available",
+    "mirror_design_spec",
+    "resolve",
+    "BackendExecution",
+    "ExecutedGemm",
+    "active_backend",
+    "active_execution",
+    "use_backend",
+]

@@ -1,0 +1,149 @@
+"""The :class:`GemmBackend` object: one GEMM engine at a fixed bit-width.
+
+A backend bundles, behind one typed interface, everything the rest of the
+stack previously reached for through string keys into the mutable
+``gemm_sims`` registry:
+
+* **execution** — :meth:`GemmBackend.execute` (fast functional GEMM, 2-D or
+  batched, jit-/vmap-friendly) and :meth:`GemmBackend.stream` (cycle-faithful
+  simulation returning ``(out, cycles)``);
+* **cost** — :meth:`GemmBackend.cycles` (worst case), :meth:`GemmBackend.dyn_cycles`
+  (Eq. 1 from a sparsity statistic, or operand-driven from a concrete
+  quantized tile) and :meth:`GemmBackend.price` (a whole model workload on
+  ``core.accounting``'s DLA tiling);
+* **metadata** — ``name``, ``bits``, ``exact`` (deterministic integer result,
+  bit-identical to the binary oracle) and ``has_synthesis_data`` (the paper
+  published post-synthesis PPA for this design under its own name).
+
+Backends are immutable values: constructing one never mutates any global
+registry, two backends with the same construction arguments compare equal,
+and a backend captured by a jitted function is a trace-time constant.
+Construct them with :func:`repro.backends.resolve`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm_sims
+
+__all__ = ["GemmBackend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmBackend:
+    """A GEMM execution engine (simulated or Pallas) at a fixed bit-width.
+
+    ``pricing_design`` is the calibrated design name :meth:`price`,
+    :meth:`cycles` and :meth:`dyn_cycles` charge against — the backend's own
+    name for the four paper designs, the simulator sibling for the Pallas
+    mirrors (one cost model, two execution engines).
+
+    Equality/hash compare the construction arguments (name, bits, kernel
+    knobs, metadata), not engine identity: two backends resolved from the
+    same arguments compare equal.  The converse caveat: a design
+    re-registered under an existing name (``register_design(...,
+    overwrite=True)`` inside a ``scoped_registry``) resolves to a backend
+    that still compares equal to the stock one — don't key caches by
+    backend across registry mutations.
+    """
+
+    name: str
+    bits: int
+    exact: bool
+    has_synthesis_data: bool
+    pricing_design: str
+    # Execution engine.  Excluded from equality/hash: mirror specs hold
+    # per-resolve closures, and the value identity of a backend is fully
+    # determined by the fields above plus the kernel knobs below.
+    spec: gemm_sims.DesignSpec = dataclasses.field(repr=False, compare=False)
+    # Pallas-kernel knobs the spec was built with (None for simulated
+    # designs and for registry-resolved mirrors, whose knobs are baked in).
+    block: tuple | None = None
+    interpret: bool | None = None
+
+    def __post_init__(self) -> None:
+        if self.bits < 2:
+            raise ValueError(f"bits must be >= 2, got {self.bits}")
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Functional GEMM on already-quantized integer codes.
+
+        ``a``: (M, K) codes, or (B, M, K) for a batch of problems; ``b``:
+        (K, N), or (B, K, N) per-problem, or (K, N) shared across the batch
+        (the weight-stationary serving case).  Returns (…, M, N) — int32 for
+        exact designs, float32 estimate for stochastic uGEMM.  Traceable:
+        safe to call under ``jax.jit`` / ``jax.vmap``.
+        """
+        if a.ndim == 2:
+            return self.spec.exact_fn(a, b, self.bits)
+        if a.ndim != 3:
+            raise ValueError(
+                f"execute wants (M, K) or (B, M, K) operands, got {a.shape}")
+        fn = lambda x, y: self.spec.exact_fn(x, y, self.bits)  # noqa: E731
+        return jax.vmap(fn, in_axes=(0, 0 if b.ndim == 3 else None))(a, b)
+
+    def stream(self, a: jax.Array, b: jax.Array):
+        """Cycle-faithful simulation (or kernel run): ``(out, cycles)``.
+
+        ``cycles`` equals :meth:`cycles` of the contraction length — the
+        simulated schedules are worst-case.
+        """
+        return self.spec.stream_fn(a, b, self.bits)
+
+    # -- cost ---------------------------------------------------------------
+
+    def cycles(self, common_dim: int) -> int:
+        """Worst-case clock cycles for one GEMM streaming over ``common_dim``."""
+        return self.spec.wc_cycles_fn(self.bits, common_dim)
+
+    def dyn_cycles(self, common_dim: int | None = None, *,
+                   bit_sparsity: float | None = None,
+                   operand=None) -> float:
+        """Dynamic (early-terminating) cycles for one GEMM.
+
+        Exactly one source of dynamism:
+
+        * ``operand`` — a concrete quantized temporal-operand tile, shape
+          (K, n) or (K,); cycles follow the per-outer-product-step max
+          magnitudes (the largest value in flight gates every lane).
+        * ``bit_sparsity`` — paper Eq. 1: ``wc * (1 - bit_sparsity)``
+          (requires ``common_dim``; only sparsity-aware designs benefit).
+        * neither — worst case (requires ``common_dim``).
+        """
+        if operand is not None:
+            if bit_sparsity is not None:
+                raise ValueError("pass either operand or bit_sparsity, not both")
+            q = jnp.asarray(operand, jnp.int32)
+            if q.ndim == 1:
+                q = q[:, None]
+            k = q.shape[0]
+            if self.spec.dyn_operand_fn is None:
+                return float(self.spec.wc_cycles_fn(self.bits, k))
+            step_max = jnp.max(jnp.abs(q), axis=tuple(range(1, q.ndim)))
+            return float(self.spec.dyn_operand_fn(self.bits, step_max))
+        if common_dim is None:
+            raise ValueError("common_dim is required without an operand")
+        wc = self.cycles(common_dim)
+        if bit_sparsity is not None and self.spec.sparsity_aware:
+            return wc * (1.0 - float(bit_sparsity))
+        return float(wc)
+
+    def price(self, workload, *, unit_n: int = 128, num_units: int = 1):
+        """Price a model workload on a DLA built from this design.
+
+        ``workload`` — a list of ``core.accounting.GemmCall`` or a
+        ``GemmWorkloadRecorder``.  Returns a ``core.accounting.ModelCost``.
+        Pallas mirrors price as their simulator sibling (same silicon, same
+        schedule — a different execution engine doesn't change PPA); designs
+        with no paper calibration raise ppa's "no PPA calibration" error.
+        """
+        from repro.core import accounting
+        calls = getattr(workload, "calls", workload)
+        return accounting.price_workload(calls, design=self, bits=self.bits,
+                                         unit_n=unit_n, num_units=num_units)

@@ -1,0 +1,118 @@
+"""Backend construction: :func:`resolve` specs into :class:`GemmBackend`s.
+
+Resolution rules (in order):
+
+1. A :class:`GemmBackend` instance resolves to itself (re-widthed if ``bits``
+   differs; re-built by name if kernel knobs ``block``/``interpret`` are
+   given, so they can apply).
+2. A Pallas mirror name (``tugemm_pallas`` / ``tubgemm_pallas``) with
+   explicit ``block``/``interpret`` — or one absent from the live
+   ``gemm_sims`` registry — is built **directly** from the kernel entry
+   points: no registration, no global mutation.  The mirror inherits its
+   simulator sibling's cycle/sparsity model and prices as the sibling.
+3. Any other name is looked up in the live ``gemm_sims`` registry (so
+   designs registered at runtime — including mirrors registered through the
+   deprecated ``register_kernel_backends`` — stay resolvable), else a
+   ValueError names the resolvable backends.
+
+``block``/``interpret`` are kernel-only knobs: passing them for a simulated
+design is an error rather than a silent no-op.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.backends.base import GemmBackend
+from repro.configs import paper_gemm
+from repro.core import gemm_sims
+
+__all__ = ["KERNEL_SIBLINGS", "PALLAS_SUFFIX", "available", "resolve",
+           "mirror_design_spec"]
+
+PALLAS_SUFFIX = "_pallas"
+#: kernel-backed mirror name -> the simulated design it executes
+KERNEL_SIBLINGS: dict[str, str] = {
+    "tugemm" + PALLAS_SUFFIX: "tugemm",
+    "tubgemm" + PALLAS_SUFFIX: "tubgemm",
+}
+
+
+def available() -> tuple[str, ...]:
+    """Names :func:`resolve` accepts right now: live registry + Pallas mirrors."""
+    names = list(gemm_sims.DESIGNS)
+    names.extend(n for n in KERNEL_SIBLINGS if n not in names)
+    return tuple(names)
+
+
+def mirror_design_spec(name: str, *, block=None,
+                       interpret: bool | None = None) -> gemm_sims.DesignSpec:
+    """Build a Pallas-mirror :class:`~repro.core.gemm_sims.DesignSpec`.
+
+    Pure construction — nothing is registered.  ``block`` is an optional
+    (bm, bn, bk) kernel tile override; ``interpret`` forces Pallas interpret
+    mode (None = auto: interpret off-TPU).  The returned spec shares the
+    sibling's ``wc_cycles_fn`` / ``dyn_operand_fn`` / ``sparsity_aware`` /
+    ``exact`` — one cost model, two execution engines.
+    """
+    from repro.kernels import ops  # deferred: pulls in Pallas
+
+    sibling = KERNEL_SIBLINGS[name]
+    sib = gemm_sims.get_design(sibling)
+    fn = {"tugemm": ops.tu_matmul, "tubgemm": ops.tub_matmul}[sibling]
+    kw: dict = {}
+    if block is not None:
+        kw["block"] = tuple(block)
+    if interpret is not None:
+        kw["interpret"] = interpret
+    return dataclasses.replace(
+        sib, name=name,
+        # exact path drops the cycle report; stream path keeps (out, cycles)
+        exact_fn=lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw)[0],
+        stream_fn=lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw))
+
+
+def resolve(spec: str | GemmBackend, *, bits: int | None = None,
+            block=None, interpret: bool | None = None) -> GemmBackend:
+    """Construct (or pass through) a :class:`GemmBackend`.
+
+    ``spec`` — a backend instance or a design name; ``bits`` — operand
+    bit-width (default 8, or the instance's own width); ``block`` /
+    ``interpret`` — Pallas-mirror kernel knobs (error for simulated designs).
+    Never mutates the ``gemm_sims`` registry.
+    """
+    if isinstance(spec, GemmBackend):
+        backend = spec
+        if block is not None or interpret is not None:
+            # re-build by name so the knobs can apply; the knob not being
+            # overridden is inherited from the instance
+            return resolve(backend.name,
+                           bits=backend.bits if bits is None else bits,
+                           block=backend.block if block is None else block,
+                           interpret=(backend.interpret if interpret is None
+                                      else interpret))
+        if bits is not None and int(bits) != backend.bits:
+            backend = dataclasses.replace(backend, bits=int(bits))
+        return backend
+
+    name = str(spec)
+    bits = 8 if bits is None else int(bits)
+    block = tuple(block) if block is not None else None
+    is_mirror = name in KERNEL_SIBLINGS
+    if (block is not None or interpret is not None) and not is_mirror:
+        raise ValueError(
+            f"block/interpret are Pallas-kernel knobs; {name!r} is not one of "
+            f"the kernel mirrors {tuple(KERNEL_SIBLINGS)}")
+    if is_mirror and (block is not None or interpret is not None
+                      or name not in gemm_sims.DESIGNS):
+        dspec = mirror_design_spec(name, block=block, interpret=interpret)
+    elif name in gemm_sims.DESIGNS:
+        dspec = gemm_sims.get_design(name)
+    else:
+        raise ValueError(
+            f"unknown design {name!r}; resolvable backends: {available()}")
+    return GemmBackend(
+        name=name, bits=bits, exact=dspec.exact,
+        has_synthesis_data=name in paper_gemm.DESIGNS,
+        pricing_design=KERNEL_SIBLINGS.get(name, name), spec=dspec,
+        block=block, interpret=interpret)

@@ -1,0 +1,98 @@
+"""Scoped backend execution: :func:`use_backend` threads a backend into
+``models/common.dense`` so the quantized forward pass actually contracts its
+integer tiles on the selected unary engine.
+
+The scope is a thread-local stack (nestable, exception-safe).  Inside a
+``with use_backend(...)`` block, every ``dense`` call quantizes both operands
+to the backend's bit-width, contracts the int tiles with
+:meth:`GemmBackend.execute`, and dequantizes back to the activation dtype;
+outside any scope the float path runs untouched.
+
+**Jit caveat** — the active backend is read at *trace* time.  A step function
+jitted (traced) outside the scope keeps its float execution when later called
+inside it; build/trace the jitted steps inside the scope (``launch/serve.py
+--execute-backend`` does).  For the same reason the execution trace records
+one entry per traced GEMM *site*: a layer body scanned over L layers appears
+once, not L times.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+from repro.backends.base import GemmBackend
+from repro.backends.registry import resolve
+
+__all__ = ["ExecutedGemm", "BackendExecution", "use_backend",
+           "active_backend", "active_execution"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ExecutedGemm:
+    """One GEMM site contracted on the backend (shapes static at trace time)."""
+
+    m: int
+    k: int
+    n_out: int
+    backend: str
+    bits: int
+
+
+class BackendExecution:
+    """Live handle for one :func:`use_backend` scope.
+
+    ``backend`` — the resolved :class:`GemmBackend`; ``calls`` — the
+    :class:`ExecutedGemm` sites recorded as the model traces through
+    ``dense`` (see the jit caveat in the module docstring).
+    """
+
+    def __init__(self, backend: GemmBackend) -> None:
+        self.backend = backend
+        self.calls: list[ExecutedGemm] = []
+
+    def record(self, m: int, k: int, n_out: int) -> None:
+        self.calls.append(ExecutedGemm(int(m), int(k), int(n_out),
+                                       self.backend.name, self.backend.bits))
+
+
+_TLS = threading.local()
+
+
+def _stack() -> list[BackendExecution]:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack
+
+
+def active_execution() -> BackendExecution | None:
+    """The innermost live :func:`use_backend` scope, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def active_backend() -> GemmBackend | None:
+    """The backend ``dense`` will execute on right now, or None (float path)."""
+    execution = active_execution()
+    return execution.backend if execution is not None else None
+
+
+@contextlib.contextmanager
+def use_backend(spec: str | GemmBackend, *, bits: int | None = None,
+                block=None, interpret: bool | None = None):
+    """Execute every ``dense`` contraction in the block on ``spec``.
+
+    Args as :func:`repro.backends.resolve`.  Yields the scope's
+    :class:`BackendExecution` (``.backend``, ``.calls``).  Scopes nest — the
+    innermost wins — and unwind correctly on exceptions.
+    """
+    execution = BackendExecution(resolve(spec, bits=bits, block=block,
+                                         interpret=interpret))
+    stack = _stack()
+    stack.append(execution)
+    try:
+        yield execution
+    finally:
+        stack.remove(execution)

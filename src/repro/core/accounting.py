@@ -17,7 +17,6 @@ import dataclasses
 import math
 
 from repro.core import ppa
-from repro.core import gemm_sims
 from repro.core.sparsity import SparsityStats
 
 __all__ = ["GemmCall", "GemmWorkloadRecorder", "ModelCost", "price_workload"]
@@ -88,14 +87,20 @@ class ModelCost:
         return 1.0 - self.dyn_energy_uj / self.wc_energy_uj
 
 
-def price_workload(calls: list[GemmCall], design: str = "tubgemm",
+def price_workload(calls: list[GemmCall], design="tubgemm",
                    bits: int = 4, unit_n: int = 128,
                    num_units: int = 1) -> ModelCost:
-    # live registry view (not the import-time DESIGNS snapshot) so designs
-    # registered after import are recognized; uncalibrated ones then fail
-    # in ppa with a clear "no PPA calibration" error
-    if design not in gemm_sims.DESIGNS:
-        raise ValueError(f"unknown design {design!r}")
+    """Price ``calls`` on a DLA built from ``design`` at ``bits`` width.
+
+    ``design`` is a name or a ``repro.backends.GemmBackend`` (whose own
+    ``bits`` / ``pricing_design`` then win): Pallas mirrors price as their
+    simulator sibling, uncalibrated designs fail in ppa with a clear
+    "no PPA calibration" error.
+    """
+    from repro import backends
+    backend = (design if isinstance(design, backends.GemmBackend)
+               else backends.resolve(design, bits=bits))
+    design, bits = backend.pricing_design, backend.bits
     dla = ppa.DLAModel(design=design, bits=bits, n=unit_n, num_units=num_units)
     wc_ns = dyn_ns = wc_nj = dyn_nj = 0.0
     per_layer: dict[str, tuple[float, float]] = {}

@@ -43,7 +43,9 @@ touching the dispatch functions.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import warnings
 from functools import partial
 from typing import Callable
 
@@ -60,6 +62,9 @@ __all__ = [
     "DesignSpec",
     "register_design",
     "get_design",
+    "registry_snapshot",
+    "registry_restore",
+    "scoped_registry",
     "wc_cycles",
     "dynamic_cycles_from_sparsity",
     "dynamic_cycles_from_operand",
@@ -107,6 +112,8 @@ class DesignSpec:
     (paper Eq. 1 applies); False runs at worst case regardless of operands.
     ``dyn_operand_fn(bits, step_max)`` — dynamic cycles from the per-outer-
     product-step max magnitudes ``step_max: (K,)``; None means worst case.
+    ``exact`` — True iff the functional result is deterministic integer GEMM
+    (bit-identical to the binary oracle); False for stochastic designs.
     """
 
     name: str
@@ -115,6 +122,7 @@ class DesignSpec:
     wc_cycles_fn: Callable[[int, int], int]
     sparsity_aware: bool = False
     dyn_operand_fn: Callable[[int, jax.Array], jax.Array] | None = None
+    exact: bool = True
 
 
 _REGISTRY: dict[str, DesignSpec] = {}
@@ -131,6 +139,7 @@ def register_design(name: str,
                     *,
                     sparsity_aware: bool = False,
                     dyn_operand_fn: Callable | None = None,
+                    exact: bool = True,
                     overwrite: bool = False) -> DesignSpec:
     """Register a GEMM unit design with the dispatch layer.
 
@@ -150,7 +159,8 @@ def register_design(name: str,
     spec = DesignSpec(name=name, exact_fn=exact_fn, stream_fn=stream_fn,
                       wc_cycles_fn=wc_cycles_fn,
                       sparsity_aware=sparsity_aware,
-                      dyn_operand_fn=dyn_operand_fn)
+                      dyn_operand_fn=dyn_operand_fn,
+                      exact=exact)
     _REGISTRY[name] = spec
     DESIGNS = tuple(_REGISTRY)
     return spec
@@ -162,6 +172,41 @@ def get_design(name: str) -> DesignSpec:
         return _REGISTRY[name]
     except KeyError:
         raise ValueError(f"unknown design {name!r}") from None
+
+
+def registry_snapshot() -> dict[str, DesignSpec]:
+    """Copy of the current design registry, for :func:`registry_restore`.
+
+    The only supported way to save/restore registry state: restoring through
+    this API keeps ``DESIGNS`` in sync with ``_REGISTRY`` through the same
+    code path :func:`register_design` uses, so consumers reading the module
+    attribute never observe a desynced view.  (Consumers holding a
+    ``from gemm_sims import DESIGNS`` snapshot are pinned to their import-time
+    tuple either way — read ``gemm_sims.DESIGNS`` for a live view.)
+    """
+    return dict(_REGISTRY)
+
+
+def registry_restore(snapshot: dict[str, DesignSpec]) -> None:
+    """Reset the registry (and ``DESIGNS``) to a :func:`registry_snapshot`."""
+    global DESIGNS
+    _REGISTRY.clear()
+    _REGISTRY.update(snapshot)
+    DESIGNS = tuple(_REGISTRY)
+
+
+@contextlib.contextmanager
+def scoped_registry():
+    """Context manager: registry mutations inside the block don't escape it.
+
+    Snapshots on entry and restores on exit (exception-safe, nestable).
+    Yields the snapshot taken at entry.
+    """
+    snapshot = registry_snapshot()
+    try:
+        yield snapshot
+    finally:
+        registry_restore(snapshot)
 
 
 # ---------------------------------------------------------------------------
@@ -462,48 +507,71 @@ def ugemm_stream_scan(a: jax.Array, b: jax.Array, bits: int):
 
 
 # ---------------------------------------------------------------------------
-# Dispatch
+# Dispatch (deprecated shims)
+#
+# The string-keyed dispatch functions below predate the typed backend API in
+# ``repro.backends``; they are kept as thin delegating shims so paper-table
+# consumers keep working unchanged.  Each emits a DeprecationWarning exactly
+# once per process and returns bit-identical results to the replacement call.
 # ---------------------------------------------------------------------------
 
-def gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8) -> jax.Array:
-    """Fast functional GEMM under the chosen unit design.
+_DEPRECATION_EMITTED: set[str] = set()
 
-    Args: ``design`` — registered name; ``a`` (M, K) / ``b`` (K, N) quantized
-    int codes; ``bits`` — their bit-width w.
-    Returns: (M, N) output — int32 for the exact designs, float32 estimate
-    for stochastic uGEMM.  No latency is reported; see :func:`stream_gemm`.
+
+def _warn_once(fn_name: str, replacement: str) -> None:
+    if fn_name in _DEPRECATION_EMITTED:
+        return
+    _DEPRECATION_EMITTED.add(fn_name)
+    warnings.warn(
+        f"repro.core.gemm_sims.{fn_name} is deprecated; use {replacement} "
+        f"(see docs/BACKENDS.md for the migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+def gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8) -> jax.Array:
+    """Deprecated: use ``repro.backends.resolve(design, bits=...).execute``.
+
+    Fast functional GEMM under the chosen unit design.  Args: ``design`` —
+    registered name; ``a`` (M, K) / ``b`` (K, N) quantized int codes;
+    ``bits`` — their bit-width w.  Returns: (M, N) output — int32 for the
+    exact designs, float32 estimate for stochastic uGEMM.
     """
-    return get_design(design).exact_fn(a, b, bits)
+    _warn_once("gemm", "repro.backends.resolve(design, bits=bits).execute(a, b)")
+    from repro import backends
+    return backends.resolve(design, bits=bits).execute(a, b)
 
 
 def stream_gemm(design: str, a: jax.Array, b: jax.Array, bits: int = 8):
-    """Cycle-faithful stream simulation under the chosen unit design.
+    """Deprecated: use ``repro.backends.resolve(design, bits=...).stream``.
 
-    Args: as :func:`gemm`.  Returns: ``(out, cycles)`` — the unit's output
-    plus the clock cycles the schedule takes (== ``wc_cycles`` for the
-    worst-case schedules simulated here).
+    Cycle-faithful stream simulation under the chosen unit design.  Returns
+    ``(out, cycles)`` — the unit's output plus the clock cycles the schedule
+    takes (== ``wc_cycles`` for the worst-case schedules simulated here).
     """
-    return get_design(design).stream_fn(a, b, bits)
+    _warn_once("stream_gemm",
+               "repro.backends.resolve(design, bits=bits).stream(a, b)")
+    from repro import backends
+    return backends.resolve(design, bits=bits).stream(a, b)
 
 
 @partial(jax.jit, static_argnames=("design", "bits"))
+def _gemm_batched_jit(design: str, a: jax.Array, b: jax.Array, bits: int):
+    from repro import backends
+    return backends.resolve(design, bits=bits).execute(a, b)
+
+
 def gemm_batched(design: str, a: jax.Array, b: jax.Array,
                  bits: int = 8) -> jax.Array:
-    """Batched fast functional GEMM: one jit over a stack of problems.
+    """Deprecated: use ``repro.backends.resolve(design, bits=...).execute``.
 
-    ``a``: (B, M, K) (or (M, K), which falls through to :func:`gemm`);
-    ``b``: (B, K, N) per-problem operands, or (K, N) shared across the batch
-    (the weight-stationary serving case).  Sweeps over matrix sizes /
-    bit-widths stack same-shaped problems on the batch axis and call this
-    once per (design, bits) — benchmarks/run.py and launch/serve.py drive it.
+    Batched fast functional GEMM, one jit per (design, bits) as before the
+    deprecation.  ``a``: (B, M, K) (or (M, K), which falls through to the
+    2-D path); ``b``: (B, K, N) per-problem operands, or (K, N) shared
+    across the batch (the weight-stationary serving case).
     """
-    spec = get_design(design)
-    if a.ndim == 2:
-        return spec.exact_fn(a, b, bits)
-    if a.ndim != 3:
-        raise ValueError(f"gemm_batched wants (B, M, K) operands, got {a.shape}")
-    fn = lambda x, y: spec.exact_fn(x, y, bits)  # noqa: E731
-    return jax.vmap(fn, in_axes=(0, 0 if b.ndim == 3 else None))(a, b)
+    _warn_once("gemm_batched",
+               "repro.backends.resolve(design, bits=bits).execute(a, b)")
+    return _gemm_batched_jit(design, a, b, bits)
 
 
 # ---------------------------------------------------------------------------
@@ -515,6 +583,7 @@ register_design(
     exact_fn=lambda a, b, bits: ugemm_exact(a, b, bits=bits),
     stream_fn=lambda a, b, bits: ugemm_stream(a, b, bits),
     wc_cycles_fn=lambda bits, common_dim: 2 ** bits,
+    exact=False,   # stochastic multiplier: estimate, not the int32 oracle
 )
 
 register_design(

@@ -13,9 +13,9 @@ module turns that from a fixed set of tables into an explorable space:
 * :func:`crossovers` finds the frontier: walking ``n`` upward at fixed bits,
   the points where a metric's winner changes hands (e.g. the tubGEMM-over-
   bGEMM 4-bit energy takeover between 32x32 and 64x64 the paper highlights).
-* :func:`kernel_crosscheck` executes the Pallas kernels (registered into the
-  design registry by ``kernels.backends``) and verifies their outputs and
-  cycle reports against the stream simulators and ``wc_cycles``.
+* :func:`kernel_crosscheck` executes the Pallas kernels (resolved as typed
+  ``repro.backends`` objects — no registry mutation) and verifies their
+  outputs and cycle reports against the stream simulators and ``wc_cycles``.
 * :func:`recommend_backend` prices a *model's* recorded GEMM workload
   (``core.accounting``) on every design and names the optimal backend for the
   model's actual layer shapes — wired into ``launch/serve.py``.
@@ -33,7 +33,7 @@ from typing import Iterable, Sequence
 from repro.configs import paper_gemm
 from repro.core import ppa
 from repro.core import gemm_sims
-from repro.core.accounting import GemmCall, price_workload
+from repro.core.accounting import GemmCall
 
 __all__ = [
     "METRICS",
@@ -251,39 +251,39 @@ def kernel_crosscheck(bits_list: Sequence[int] = (2, 4, 8),
                       seed: int = 0) -> list[dict]:
     """Run the Pallas kernel backends against their simulator siblings.
 
-    Registers ``tugemm_pallas`` / ``tubgemm_pallas`` *scoped to this call*
-    (``backends.kernel_backends`` snapshot/restores the registry, so live
-    ``DESIGNS`` iterators elsewhere never observe the uncalibrated mirrors),
-    then for each sibling pair and bit-width runs both engines on the same
-    random (m, k) x (k, n) operands and records: bit-identity of outputs,
-    equality of the kernel's cycle report with the simulator's, and with the
-    analytic ``wc_cycles`` model.  Returns one dict per (design, bits) with
+    Resolves each mirror/sibling pair as typed ``repro.backends`` objects —
+    pure construction, the ``gemm_sims`` registry is never touched, so live
+    ``DESIGNS`` iterators elsewhere never observe the uncalibrated mirrors.
+    For each pair and bit-width both engines run the same random
+    (m, k) x (k, n) operands; records bit-identity of outputs, equality of
+    the kernel's cycle report with the simulator's, and with the analytic
+    worst-case cycle model.  Returns one dict per (design, bits) with
     boolean ``output_ok`` / ``cycles_ok`` plus both cycle numbers.
     """
     import numpy as np
     import jax.numpy as jnp
-    from repro.kernels import backends
+    from repro import backends
 
     rng = np.random.default_rng(seed)
     m, k, n = mkn
     rows = []
-    with backends.kernel_backends(block=block) as names:
-        for bits in bits_list:
-            v = 2 ** (bits - 1) - 1
-            a = jnp.asarray(rng.integers(-v, v + 1, (m, k)), jnp.int8)
-            b = jnp.asarray(rng.integers(-v, v + 1, (k, n)), jnp.int8)
-            for name in names:
-                sibling = backends.KERNEL_SIBLINGS[name]
-                k_out, k_cyc = gemm_sims.stream_gemm(name, a, b, bits)
-                s_out, s_cyc = gemm_sims.stream_gemm(sibling, a, b, bits)
-                wc = gemm_sims.wc_cycles(sibling, bits, k)
-                rows.append(dict(
-                    design=sibling, kernel=name, bits=bits, m=m, k=k, n=n,
-                    output_ok=bool(np.array_equal(np.asarray(k_out),
-                                                  np.asarray(s_out))),
-                    cycles_ok=(int(k_cyc) == int(s_cyc) == wc),
-                    kernel_cycles=int(k_cyc), sim_cycles=int(s_cyc),
-                    wc_cycles=wc))
+    for bits in bits_list:
+        v = 2 ** (bits - 1) - 1
+        a = jnp.asarray(rng.integers(-v, v + 1, (m, k)), jnp.int8)
+        b = jnp.asarray(rng.integers(-v, v + 1, (k, n)), jnp.int8)
+        for name, sibling in backends.KERNEL_SIBLINGS.items():
+            kb = backends.resolve(name, bits=bits, block=block)
+            sb = backends.resolve(sibling, bits=bits)
+            k_out, k_cyc = kb.stream(a, b)
+            s_out, s_cyc = sb.stream(a, b)
+            wc = sb.cycles(k)
+            rows.append(dict(
+                design=sibling, kernel=name, bits=bits, m=m, k=k, n=n,
+                output_ok=bool(np.array_equal(np.asarray(k_out),
+                                              np.asarray(s_out))),
+                cycles_ok=(int(k_cyc) == int(s_cyc) == wc),
+                kernel_cycles=int(k_cyc), sim_cycles=int(s_cyc),
+                wc_cycles=wc))
     return rows
 
 
@@ -321,8 +321,10 @@ def recommend_backend(calls: list[GemmCall], *, bits: int, unit_n: int,
     rankings ascending.
     """
     if costs is None:
-        costs = {d: price_workload(calls, design=d, bits=bits, unit_n=unit_n,
-                                   num_units=num_units) for d in designs}
+        from repro import backends
+        costs = {d: backends.resolve(d, bits=bits)
+                 .price(calls, unit_n=unit_n, num_units=num_units)
+                 for d in designs}
     out: dict[str, dict] = {}
     for objective in ("dyn_energy_uj", "wc_energy_uj",
                       "dyn_latency_us", "wc_latency_us"):

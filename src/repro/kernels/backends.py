@@ -1,84 +1,87 @@
-"""Register the Pallas unary-GEMM kernels as executable designs.
+"""Registry-side access to the Pallas unary-GEMM kernel mirrors (legacy).
 
-The ``gemm_sims`` registry dispatches the four *simulated* paper designs; the
-Pallas kernels are the same tuGEMM/tubGEMM schedules executed on-device (or
-under ``interpret=True`` on CPU).  :func:`register_kernel_backends` adds them
-as ``tugemm_pallas`` / ``tubgemm_pallas`` so anything that drives the
-registry — ``gemm``, ``stream_gemm``, the sweet-spot explorer's kernel
-cross-check — can run the kernels through the exact same dispatch surface and
-compare their cycle reports against ``wc_cycles`` of the simulator siblings.
+The typed way to run the kernels is ``repro.backends.resolve("tugemm_pallas")``
+— pure construction, no global state.  This module keeps the older
+*registry-mutating* surface alive for consumers that drive the kernels
+through ``gemm_sims`` string dispatch:
 
-Registration is deliberately *not* done at import time: consumers that
-snapshot ``gemm_sims.DESIGNS`` at import (the paper-table benchmarks, the
-Fig. 2 slope reproduction) iterate exactly the four calibrated designs, and a
-kernel mirror has no synthesis data of its own.  Call this explicitly where
-kernel execution is wanted.  The mirrors inherit their sibling's latency and
-sparsity model (``wc_cycles_fn``, ``dyn_operand_fn``), which is the point:
-one cost model, two execution engines.
+* :func:`register_kernel_backends` (deprecated) registers the mirrors as
+  ``tugemm_pallas`` / ``tubgemm_pallas`` registry designs.  Registration is
+  deliberately *not* done at import time: consumers that snapshot
+  ``gemm_sims.DESIGNS`` at import (the paper-table benchmarks, the Fig. 2
+  slope reproduction) iterate exactly the four calibrated designs.
+* :func:`kernel_backends` scopes a registration to a ``with`` block via
+  ``gemm_sims.scoped_registry`` — snapshot/restore through the registry's
+  own API, so ``DESIGNS`` stays in sync and nesting/exceptions unwind
+  correctly.
+
+The mirrors inherit their sibling's latency and sparsity model
+(``wc_cycles_fn``, ``dyn_operand_fn``), which is the point: one cost model,
+two execution engines.
 """
 
 from __future__ import annotations
 
 import contextlib
+import warnings
 
 from repro.core import gemm_sims
 
-PALLAS_SUFFIX = "_pallas"
-#: kernel-backed mirror name -> the simulated design it executes
-KERNEL_SIBLINGS = {
-    "tugemm" + PALLAS_SUFFIX: "tugemm",
-    "tubgemm" + PALLAS_SUFFIX: "tubgemm",
-}
+# Canonical mapping lives in repro.backends.registry; re-exported here for
+# the existing import sites.
+from repro.backends.registry import KERNEL_SIBLINGS, PALLAS_SUFFIX  # noqa: F401
+
+_DEPRECATION_EMITTED = False
+
+
+def _register(*, block=None, interpret: bool | None = None) -> tuple[str, ...]:
+    from repro.backends.registry import mirror_design_spec
+
+    for name in KERNEL_SIBLINGS:
+        spec = mirror_design_spec(name, block=block, interpret=interpret)
+        gemm_sims.register_design(
+            name,
+            exact_fn=spec.exact_fn,
+            stream_fn=spec.stream_fn,
+            wc_cycles_fn=spec.wc_cycles_fn,
+            sparsity_aware=spec.sparsity_aware,
+            dyn_operand_fn=spec.dyn_operand_fn,
+            exact=spec.exact,
+            overwrite=True,
+        )
+    return tuple(KERNEL_SIBLINGS)
 
 
 def register_kernel_backends(*, block=None, interpret: bool | None = None
                              ) -> tuple[str, ...]:
-    """Idempotently register ``tugemm_pallas`` / ``tubgemm_pallas``.
+    """Deprecated: resolve mirrors with ``repro.backends.resolve`` instead.
 
-    Args: ``block`` — optional (bm, bn, bk) kernel tile override; ``interpret``
-    — force Pallas interpret mode (None = auto: interpret off-TPU).
-    Returns: the tuple of registered mirror names.  Safe to call repeatedly
-    (re-registers with ``overwrite=True``).
+    Idempotently registers ``tugemm_pallas`` / ``tubgemm_pallas`` into the
+    ``gemm_sims`` registry (re-registers with ``overwrite=True``).  Args:
+    ``block`` — optional (bm, bn, bk) kernel tile override; ``interpret`` —
+    force Pallas interpret mode (None = auto: interpret off-TPU).  Returns
+    the tuple of registered mirror names.
     """
-    from repro.kernels import ops
-
-    kernel_fns = {"tugemm": ops.tu_matmul, "tubgemm": ops.tub_matmul}
-    kw: dict = {}
-    if block is not None:
-        kw["block"] = tuple(block)
-    if interpret is not None:
-        kw["interpret"] = interpret
-
-    for name, sibling in KERNEL_SIBLINGS.items():
-        sib = gemm_sims.get_design(sibling)
-        fn = kernel_fns[sibling]
-        gemm_sims.register_design(
-            name,
-            # exact path drops the cycle report; stream path keeps (out, cycles)
-            exact_fn=(lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw)[0]),
-            stream_fn=(lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw)),
-            wc_cycles_fn=sib.wc_cycles_fn,
-            sparsity_aware=sib.sparsity_aware,
-            dyn_operand_fn=sib.dyn_operand_fn,
-            overwrite=True,
-        )
-    return tuple(KERNEL_SIBLINGS)
+    global _DEPRECATION_EMITTED
+    if not _DEPRECATION_EMITTED:
+        _DEPRECATION_EMITTED = True
+        warnings.warn(
+            "register_kernel_backends is deprecated; construct kernel "
+            "backends with repro.backends.resolve('tugemm_pallas', ...) — "
+            "no registry mutation needed (see docs/BACKENDS.md)",
+            DeprecationWarning, stacklevel=2)
+    return _register(block=block, interpret=interpret)
 
 
 @contextlib.contextmanager
 def kernel_backends(**kwargs):
     """Scoped registration: the mirrors exist only inside the ``with`` block.
 
-    Snapshots the design registry, runs :func:`register_kernel_backends`
-    (same kwargs), and restores the registry — including any pre-existing
-    ``*_pallas`` registration it overwrote — on exit.  Use this for one-shot
-    consumers (sweeps, cross-checks) so live-``DESIGNS`` iterators elsewhere
-    never observe the uncalibrated mirrors.
+    Snapshot/restore runs through ``gemm_sims.scoped_registry`` — the
+    registry's own API — so ``gemm_sims.DESIGNS`` stays in sync with the
+    registry contents, scopes nest, and an exception inside the body still
+    restores the outer state (including any pre-existing ``*_pallas``
+    registration this scope overwrote).
     """
-    saved = dict(gemm_sims._REGISTRY)
-    try:
-        yield register_kernel_backends(**kwargs)
-    finally:
-        gemm_sims._REGISTRY.clear()
-        gemm_sims._REGISTRY.update(saved)
-        gemm_sims.DESIGNS = tuple(saved)
+    with gemm_sims.scoped_registry():
+        yield _register(**kwargs)

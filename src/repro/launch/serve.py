@@ -1,26 +1,36 @@
 """Batched serving driver: prefill + decode with unary-DLA energy accounting.
 
-This is where the paper's technique meets the serving stack: every quantized
-GEMM in the model is priced on a chosen unary/binary PE-array backend
-(--gemm-backend {ugemm,tugemm,tubgemm,bgemm}, --bits {2,4,8}) using the
-*measured* block-max bit sparsity of the actual weights (Eq. 1), giving
-per-token energy/latency for the whole model alongside the generated tokens.
+This is where the paper's technique meets the serving stack, in two modes:
+
+* **pricing** (always on): every quantized GEMM in the model is priced on a
+  chosen unary/binary PE-array backend (--gemm-backend, --bits) using the
+  *measured* block-max bit sparsity of the actual weights (Eq. 1), giving
+  per-token energy/latency for the whole model alongside the generated tokens.
+* **execution** (--execute-backend): prefill and decode actually run every
+  quantized dense layer through a typed ``repro.backends`` engine — int
+  tiles contracted on the selected unary design (or its Pallas kernel
+  mirror), dequantized back to the activation dtype — and the driver reports
+  the int GEMMs' bit-exactness vs the binary oracle, the output drift vs the
+  float model, and the measured cycle totals against the priced dyn/wc
+  bounds.
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --gemm-backend tubgemm --bits 4 --tokens 32
+        --execute-backend tubgemm --bits 4 --tokens 8
 """
 
 from __future__ import annotations
 
 import argparse
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import backends as backends_lib
 from repro import configs
-from repro.core import accounting, sparsity
+from repro.core import accounting, ppa, sparsity
 from repro.core import gemm_sims as gemm_sims_lib
 from repro.core.quantization import quantize
 from repro.eval import sweetspot as sweetspot_lib
@@ -29,10 +39,12 @@ from repro.launch.mesh import single_device_mesh
 from repro.models import model as model_lib
 
 
-def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
-    """GemmCalls for ONE decode step, with measured per-matrix sparsity."""
-    rec = accounting.GemmWorkloadRecorder()
-    stats = {}
+def _iter_weight_matrices(cfg, params):
+    """Yield ``(name, (k, n_out) float32 weight)`` for every priced matmul.
+
+    The single walk both the pricing workload and the measured-cycle report
+    are built from, so they see identical matrices.
+    """
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     for path, leaf in flat:
         if not hasattr(leaf, "ndim") or leaf.ndim < 2:
@@ -42,6 +54,14 @@ def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
             continue
         w = np.asarray(leaf, np.float32).reshape(leaf.shape[0], -1) \
             if leaf.ndim == 2 else np.asarray(leaf, np.float32).reshape(-1, leaf.shape[-1])
+        yield name, w
+
+
+def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
+    """GemmCalls for ONE decode step, with measured per-matrix sparsity."""
+    rec = accounting.GemmWorkloadRecorder()
+    stats = {}
+    for name, w in _iter_weight_matrices(cfg, params):
         st = sparsity.profile_tensor(jnp.asarray(w), bits=bits)
         stats[name] = st
         k, n_out = w.shape
@@ -50,16 +70,20 @@ def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
     return rec, stats
 
 
-def validate_backend_numerics(params, design: str, bits: int,
+def validate_backend_numerics(params, design, bits: int | None = None,
                               n_tiles: int = 8, tile: int = 16) -> float:
     """Spot-check the selected GEMM backend on tiles of the real weights.
 
     Quantizes ``n_tiles`` (tile x tile) slices of actual model weights,
     stacks them on a batch axis, and pushes the whole stack through
-    ``gemm_sims.gemm_batched`` in one jit against the binary oracle.  Exact
-    designs (tu/tub/b) must come back bit-identical; uGEMM reports its
-    stochastic relative RMSE.  Returns the relative error.
+    ``GemmBackend.execute`` in one batched call against the binary oracle.
+    ``design`` is a backend name or ``repro.backends.GemmBackend`` (``bits``
+    then defaults to the backend's own width).  Exact designs (tu/tub/b and
+    the Pallas mirrors) must come back bit-identical — returns 0.0 — while
+    uGEMM reports its stochastic relative RMSE.
     """
+    backend = backends_lib.resolve(design, bits=bits)
+    oracle = backends_lib.resolve("bgemm", bits=backend.bits)
     leaves = [l for l in jax.tree_util.tree_leaves(params)
               if hasattr(l, "ndim") and l.ndim >= 2 and l.size >= 2 * tile * tile]
     if not leaves:
@@ -71,14 +95,61 @@ def validate_backend_numerics(params, design: str, bits: int,
         chunk = flat[off:off + tile * tile]
         if chunk.size < tile * tile:
             chunk = flat[:tile * tile]
-        q = quantize(jnp.asarray(chunk.reshape(tile, tile)), bits=bits,
+        q = quantize(jnp.asarray(chunk.reshape(tile, tile)), bits=backend.bits,
                      per_channel=False)
         tiles.append(q.values.astype(jnp.int8))
     a = jnp.stack(tiles[:n_tiles])
     b = jnp.stack(tiles[n_tiles:])
-    return gemm_sims_lib.rel_rmse(
-        gemm_sims_lib.gemm_batched(design, a, b, bits),
-        gemm_sims_lib.gemm_batched("bgemm", a, b, bits))
+    return gemm_sims_lib.rel_rmse(backend.execute(a, b), oracle.execute(a, b))
+
+
+def measure_decode_cycles(cfg, params, backend, *, batch: int, unit_n: int,
+                          num_units: int, stats=None) -> dict[str, float]:
+    """Per-decode-token cycle totals for the model on one backend.
+
+    Four numbers per the DLA tiling ``core.ppa.DLAModel`` uses (per-tile
+    cycles x ceil(tiles / num_units) waves, common dim = k):
+
+    * ``wc`` — worst case, ``backend.cycles(k)`` per tile;
+    * ``dyn_floor`` — Eq. 1 with *element-level* bit sparsity: every lane
+      terminating at its own magnitude, an optimistic lower bound the shared
+      slot schedule cannot beat;
+    * ``measured`` — operand-driven: ``backend.dyn_cycles(operand=...)`` on
+      the same **per-channel** quantized codes ``models/common.dense``
+      contracts under ``use_backend`` — the cycles the early-terminating
+      counters really take, with each outer-product step gated by the
+      largest magnitude in flight;
+    * ``dyn`` — the priced Eq. 1 estimate (worst case scaled by the
+      block-max bit sparsity the cost tables use): gating at PE-block
+      granularity.  Comparable to ``measured`` but not a bound on it — the
+      statistic profiles a per-tensor grid while execution contracts
+      per-channel codes.
+
+    The Eq. 1 statistics follow the paper's per-tensor profiling
+    (``core.sparsity.profile_tensor``); ``measured`` reflects the executed
+    codes.  For sparsity-aware designs ``dyn_floor <= measured <= wc`` (wc
+    caps every step); designs without early termination report all four
+    equal.  The serve driver checks ``dyn_floor <= measured <= wc``.
+
+    ``stats`` — optional ``{name: SparsityStats}`` at ``backend.bits`` (from
+    ``build_workload``) to skip re-profiling every weight matrix.
+    """
+    dla = ppa.DLAModel(design=backend.pricing_design, bits=backend.bits,
+                       n=unit_n, num_units=num_units)
+    totals = {"wc": 0.0, "dyn": 0.0, "dyn_floor": 0.0, "measured": 0.0}
+    for name, w in _iter_weight_matrices(cfg, params):
+        k, n_out = w.shape
+        # per-channel, matching models/common._backend_matmul exactly
+        q = quantize(jnp.asarray(w), bits=backend.bits).values
+        st = (stats or {}).get(name)
+        if st is None:
+            st = sparsity.profile_tensor(jnp.asarray(w), bits=backend.bits)
+        waves = math.ceil(dla.tiles(batch, n_out) / num_units)
+        totals["wc"] += backend.cycles(k) * waves
+        totals["dyn"] += backend.dyn_cycles(k, bit_sparsity=st.bit_blockmax) * waves
+        totals["dyn_floor"] += backend.dyn_cycles(k, bit_sparsity=st.bit_elem) * waves
+        totals["measured"] += backend.dyn_cycles(operand=q) * waves
+    return totals
 
 
 def generate(cfg, params, mesh, prompt, max_new: int, temperature: float = 0.0):
@@ -106,6 +177,59 @@ def generate(cfg, params, mesh, prompt, max_new: int, temperature: float = 0.0):
     return jnp.concatenate(out, axis=1)
 
 
+def prefill_logits(cfg, params, mesh, prompt):
+    """Full prefill logits via a freshly traced step (so an active
+    ``use_backend`` scope is honored — jitted steps bind the backend at
+    trace time)."""
+    prefill_step = steps_lib.make_prefill_step(cfg, mesh)
+    with mesh:
+        caches = model_lib.init_caches(cfg, prompt.shape[0],
+                                       prompt.shape[1] + 1, dtype=jnp.float32)
+        logits, _ = prefill_step(params, {"tokens": prompt}, caches)
+    return logits
+
+
+def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
+                          *, unit_n: int, num_units: int,
+                          ref_logits=None, stats=None) -> dict:
+    """Execute prefill+decode on ``backend`` and collect the evidence.
+
+    Returns a dict: generated ``tokens``, number of distinct GEMM ``sites``
+    contracted on the backend, int-GEMM ``rel_rmse`` vs the binary oracle,
+    prefill-logits ``drift`` + ``top1_agreement`` vs the float model, wall
+    time, and the measured/dyn/wc ``cycles`` totals per decode token.
+    ``stats`` — optional pre-profiled sparsity stats at the backend's
+    bit-width, forwarded to :func:`measure_decode_cycles`.
+    """
+    backend = backends_lib.resolve(backend)
+    if ref_logits is None:
+        ref_logits = prefill_logits(cfg, params, mesh, prompt)
+    t0 = time.time()
+    with backends_lib.use_backend(backend) as execution:
+        tokens = generate(cfg, params, mesh, prompt, max_new)
+        exec_logits = prefill_logits(cfg, params, mesh, prompt)
+    wall = time.time() - t0
+    if not execution.calls:
+        raise RuntimeError(
+            "backend execution recorded no GEMM sites — the model traced "
+            "outside the use_backend scope?")
+    ref = np.asarray(ref_logits, np.float32)
+    got = np.asarray(exec_logits, np.float32)
+    agree = float(np.mean(np.argmax(got, -1) == np.argmax(ref, -1)))
+    return {
+        "backend": backend,
+        "tokens": tokens,
+        "sites": len(execution.calls),
+        "wall_s": wall,
+        "rel_rmse": validate_backend_numerics(params, backend),
+        "drift": gemm_sims_lib.rel_rmse(got, ref),
+        "top1_agreement": agree,
+        "cycles": measure_decode_cycles(cfg, params, backend,
+                                        batch=prompt.shape[0], unit_n=unit_n,
+                                        num_units=num_units, stats=stats),
+    }
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3-8b", choices=list(configs.ARCH_IDS))
@@ -114,7 +238,13 @@ def main() -> int:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--tokens", type=int, default=32)
     ap.add_argument("--gemm-backend", default="tubgemm",
-                    choices=["ugemm", "tugemm", "tubgemm", "bgemm"])
+                    choices=["ugemm", "tugemm", "tubgemm", "bgemm"],
+                    help="design the pricing table highlights")
+    ap.add_argument("--execute-backend", default=None,
+                    choices=list(backends_lib.available()),
+                    help="also EXECUTE prefill/decode with every quantized "
+                         "dense layer contracted on this backend "
+                         "(simulated design or *_pallas kernel mirror)")
     ap.add_argument("--bits", type=int, default=4, choices=[2, 4, 8])
     ap.add_argument("--unit-n", type=int, default=128)
     ap.add_argument("--units", type=int, default=64)
@@ -152,9 +282,8 @@ def main() -> int:
           f"units, {args.bits}-bit):")
     print(f"{'design':>9s} {'wc_energy_uJ':>13s} {'dyn_energy_uJ':>14s} "
           f"{'dyn_latency_us':>15s} {'saving':>7s}")
-    costs = {design: accounting.price_workload(
-                 rec.calls, design=design, bits=args.bits,
-                 unit_n=args.unit_n, num_units=args.units)
+    costs = {design: backends_lib.resolve(design, bits=args.bits)
+             .price(rec.calls, unit_n=args.unit_n, num_units=args.units)
              for design in sweetspot_lib.CALIBRATED_DESIGNS}
     for design, cost in costs.items():
         mark = " <-- selected" if design == args.gemm_backend else ""
@@ -176,6 +305,36 @@ def main() -> int:
         print(f"note: selected backend {args.gemm_backend} spends "
               f"{e_sel / e_best:.2f}x the energy of {best_e} here "
               f"(rerun with --gemm-backend {best_e})")
+
+    # --- end-to-end execution on the chosen backend -------------------------
+    if args.execute_backend:
+        backend = backends_lib.resolve(args.execute_backend, bits=args.bits)
+        print(f"\n=== executing model on {backend.name} "
+              f"({backend.bits}-bit int tiles) ===")
+        result = run_backend_execution(
+            cfg, params, mesh, prompt, backend, args.tokens,
+            unit_n=args.unit_n, num_units=args.units, stats=stats)
+        qt = result["tokens"]
+        print(f"generated {qt.shape} tokens in {result['wall_s']:.2f}s; "
+              f"{result['sites']} dense GEMM sites contracted on the backend")
+        tag = ("bit-exact" if result["rel_rmse"] == 0.0
+               else f"relRMSE {result['rel_rmse']:.2e}")
+        kind = "exact design" if backend.exact else "stochastic design"
+        print(f"int GEMMs vs binary oracle: {tag} ({kind})")
+        print(f"output drift vs float model (prefill logits): "
+              f"relRMSE {result['drift']:.3f}, "
+              f"top-1 agreement {result['top1_agreement']:.1%}")
+        cyc = result["cycles"]
+        in_bounds = cyc["dyn_floor"] - 0.5 <= cyc["measured"] <= cyc["wc"] + 0.5
+        priced_dyn = costs[backend.pricing_design].dyn_latency_us * 1e3 \
+            / ppa.CLOCK_PERIOD_NS
+        print(f"per-decode-token cycles ({args.units}x {args.unit_n}x"
+              f"{args.unit_n} units): measured {cyc['measured']:.3e} within "
+              f"[dyn floor {cyc['dyn_floor']:.3e}, wc {cyc['wc']:.3e}]: "
+              f"{in_bounds} (priced Eq.1 dyn {priced_dyn:.3e})")
+        if not in_bounds:
+            print("WARNING: measured cycles outside the priced dyn/wc bounds")
+            return 1
     return 0
 
 

@@ -239,11 +239,23 @@ def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
           out_logical: tuple[str | None, ...] | None = None) -> jax.Array:
     """x @ w with optional unary-backend quantized execution.
 
-    When ``cfg.quant_kernel`` is set the matmul runs through the Pallas
-    packed-integer kernel (the paper's PE array stand-in).  tuGEMM/tubGEMM/
-    bGEMM are numerically identical (deterministic integer GEMM); uGEMM adds
-    its stochastic multiplier error via the LUT path.
+    Execution precedence:
+
+    1. An active ``repro.backends.use_backend(...)`` scope — both operands
+       are quantized to the backend's bit-width and the int tiles are
+       contracted on the backend engine (simulator or Pallas kernel), then
+       dequantized back to the activation dtype.  The backend is read at
+       trace time; see ``repro.backends.runtime`` for the jit caveat.
+    2. ``cfg.quant_kernel`` — the Pallas packed-integer kernel (the paper's
+       PE array stand-in).  tuGEMM/tubGEMM/bGEMM are numerically identical
+       (deterministic integer GEMM); uGEMM adds its stochastic multiplier
+       error via the LUT path.
+    3. The plain float matmul (default).
     """
+    from repro.backends import runtime as backend_runtime
+    execution = backend_runtime.active_execution()
+    if execution is not None:
+        return _backend_matmul(execution, w, x)
     if cfg is not None and cfg.quant_bits is not None and cfg.quant_kernel:
         from repro.kernels import ops as kops
         w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
@@ -258,6 +270,28 @@ def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
             out = kops.quantized_matmul(x, wq, act_bits=min(cfg.quant_bits * 2, 8))
         return out.reshape(*x.shape[:-1], *w.shape[1:])
     return _plain_matmul(x, w)
+
+
+def _backend_matmul(execution, w: jax.Array, x: jax.Array) -> jax.Array:
+    """Contract ``x @ w`` on the scope's GEMM backend as integer tiles.
+
+    Both operands are quantized at the backend's bit-width — the hardware
+    units consume w-bit codes on both ports — weights per output channel,
+    activations per tensor; the integer result is rescaled by both
+    quantization scales and cast back to the activation dtype.  The
+    activation streams as the temporal operand (orientation does not change
+    the integer result; cycle accounting prices the weight-streamed
+    schedule, see ``launch/serve.py``).
+    """
+    backend = execution.backend
+    w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
+    x2 = x.reshape(-1, x.shape[-1])
+    wq = quantize(w2.astype(jnp.float32), bits=backend.bits)
+    xq = quantize(x2.astype(jnp.float32), bits=backend.bits, per_channel=False)
+    out = backend.execute(xq.values, wq.values)
+    out = out.astype(jnp.float32) * (xq.scale * wq.scale.reshape(1, -1))
+    execution.record(m=x2.shape[0], k=w2.shape[0], n_out=w2.shape[1])
+    return out.astype(x.dtype).reshape(*x.shape[:-1], *w.shape[1:])
 
 
 def _plain_matmul(x: jax.Array, w: jax.Array) -> jax.Array:

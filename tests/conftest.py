@@ -58,8 +58,6 @@ def restore_design_registry():
             conftest.restore_design_registry)
     """
     from repro.core import gemm_sims
-    saved = dict(gemm_sims._REGISTRY)
+    saved = gemm_sims.registry_snapshot()
     yield
-    gemm_sims._REGISTRY.clear()
-    gemm_sims._REGISTRY.update(saved)
-    gemm_sims.DESIGNS = tuple(saved)
+    gemm_sims.registry_restore(saved)

@@ -1,0 +1,420 @@
+"""The typed GEMM backend API: resolve/conformance, scoped execution through
+the model, registry snapshot/restore, and the deprecation shims."""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import conftest
+from repro import backends
+from repro.core import gemm_sims as gs
+from repro.core.accounting import GemmCall, ModelCost
+from repro.core.quantization import quantize, vmax
+from repro.models import common
+
+# Some tests exercise the registry-mutating legacy surface; never leak.
+_registry = pytest.fixture(autouse=True, scope="module")(
+    conftest.restore_design_registry)
+
+
+@pytest.fixture()
+def rng():
+    # module-local stream: don't consume the session rng — downstream
+    # modules (test_system's stochastic-uGEMM agreement bound) are
+    # sensitive to their position in the shared stream
+    return np.random.default_rng(1234)
+
+BUILTIN = ("ugemm", "tugemm", "tubgemm", "bgemm")
+MIRRORS = ("tugemm_pallas", "tubgemm_pallas")
+ALL_BACKENDS = BUILTIN + MIRRORS
+
+
+def rand_codes(rng, bits, shape):
+    v = vmax(bits)
+    return jnp.asarray(rng.integers(-v, v + 1, shape), jnp.int8)
+
+
+def make(name, bits):
+    # mirrors run in interpret mode on CPU with a small block
+    if name in MIRRORS:
+        return backends.resolve(name, bits=bits, block=(32, 32, 32),
+                                interpret=True)
+    return backends.resolve(name, bits=bits)
+
+
+class TestResolve:
+    def test_metadata(self):
+        b = backends.resolve("tubgemm", bits=4)
+        assert (b.name, b.bits, b.exact, b.has_synthesis_data,
+                b.pricing_design) == ("tubgemm", 4, True, True, "tubgemm")
+        u = backends.resolve("ugemm", bits=8)
+        assert not u.exact and u.has_synthesis_data
+        m = backends.resolve("tubgemm_pallas", bits=4)
+        assert m.exact and not m.has_synthesis_data
+        assert m.pricing_design == "tubgemm"
+
+    def test_mirrors_resolve_without_registry_mutation(self):
+        before = gs.DESIGNS
+        for name in MIRRORS:
+            make(name, 4)
+        assert gs.DESIGNS == before == BUILTIN
+
+    def test_backend_instance_passthrough_and_rebits(self):
+        b4 = backends.resolve("tubgemm", bits=4)
+        assert backends.resolve(b4) is b4
+        b8 = backends.resolve(b4, bits=8)
+        assert b8.bits == 8 and b8.name == "tubgemm"
+
+    def test_equal_construction_args_compare_equal(self):
+        # includes the mirrors: spec closures are excluded from equality
+        for name in ALL_BACKENDS:
+            assert make(name, 4) == make(name, 4)
+        assert make("tubgemm", 4) != make("tubgemm", 8)
+        assert make("tubgemm", 4) != make("tugemm", 4)
+        assert len({make(n, 4) for n in ALL_BACKENDS}) == len(ALL_BACKENDS)
+
+    def test_re_resolving_mirror_keeps_other_kernel_knob(self):
+        b = backends.resolve("tubgemm_pallas", bits=4, block=(32, 32, 32))
+        assert b.block == (32, 32, 32) and b.interpret is None
+        b2 = backends.resolve(b, interpret=True)
+        assert b2.block == (32, 32, 32) and b2.interpret is True
+        b3 = backends.resolve(b2, block=(64, 64, 64))
+        assert b3.block == (64, 64, 64) and b3.interpret is True
+
+    def test_unknown_name_raises_with_available_list(self):
+        with pytest.raises(ValueError, match="unknown design"):
+            backends.resolve("nope", bits=4)
+        with pytest.raises(ValueError, match="tubgemm_pallas"):
+            backends.resolve("nope", bits=4)
+
+    def test_kernel_knobs_rejected_for_simulated_designs(self):
+        with pytest.raises(ValueError, match="Pallas-kernel knobs"):
+            backends.resolve("tubgemm", bits=4, interpret=True)
+
+    def test_bad_bits_rejected(self):
+        with pytest.raises(ValueError, match="bits"):
+            backends.resolve("tubgemm", bits=1)
+
+    def test_available_lists_builtin_plus_mirrors(self):
+        assert backends.available() == ALL_BACKENDS
+
+    def test_runtime_registered_design_resolvable(self):
+        with gs.scoped_registry():
+            gs.register_design("twice_bgemm",
+                               exact_fn=lambda a, b, bits: 2 * gs.bgemm_exact(a, b),
+                               stream_fn=lambda a, b, bits: (2 * gs.bgemm_exact(a, b), 9),
+                               wc_cycles_fn=lambda bits, k: 9)
+            b = backends.resolve("twice_bgemm", bits=4)
+            assert not b.has_synthesis_data and b.pricing_design == "twice_bgemm"
+            a = jnp.ones((2, 3), jnp.int8)
+            assert bool(jnp.all(b.execute(a, a.T) == 2 * gs.bgemm_exact(a, a.T)))
+
+
+class TestConformance:
+    """One shared execute/cycles/price contract for all six backends."""
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("name", ALL_BACKENDS)
+    def test_execute_cycles_price(self, rng, name, bits):
+        before = gs.DESIGNS
+        b = make(name, bits)
+        m, k, n = 4, 8, 5
+        a = rand_codes(rng, bits, (m, k))
+        w = rand_codes(rng, bits, (k, n))
+        out = b.execute(a, w)
+        assert out.shape == (m, n)
+        oracle = gs.bgemm_exact(a, w)
+        if b.exact:
+            assert bool(jnp.all(out == oracle))
+        else:
+            assert gs.rel_rmse(out, oracle) < 0.5
+        # stream: (out, cycles), cycles == the worst-case model
+        s_out, cycles = b.stream(a, w)
+        assert int(cycles) == b.cycles(k) == gs.wc_cycles(b.pricing_design,
+                                                          bits, k)
+        np.testing.assert_array_equal(np.asarray(s_out), np.asarray(out))
+        # price: every backend prices through its calibrated design
+        cost = b.price([GemmCall("l", 4, 64, 64, 0.25)], unit_n=64)
+        assert isinstance(cost, ModelCost)
+        assert cost.design == b.pricing_design and cost.bits == bits
+        assert cost.dyn_energy_uj > 0
+        # none of the above touched the global registry
+        assert gs.DESIGNS == before
+
+    @pytest.mark.parametrize("name", ALL_BACKENDS)
+    def test_batched_execute_matches_per_problem(self, rng, name):
+        b = make(name, 4)
+        a = jnp.stack([rand_codes(rng, 4, (3, 8)) for _ in range(3)])
+        w = jnp.stack([rand_codes(rng, 4, (8, 4)) for _ in range(3)])
+        out = b.execute(a, w)
+        assert out.shape == (3, 3, 4)
+        for i in range(3):
+            np.testing.assert_array_equal(np.asarray(out[i]),
+                                          np.asarray(b.execute(a[i], w[i])))
+        # shared weight operand (the serving case)
+        out_shared = b.execute(a, w[0])
+        np.testing.assert_array_equal(np.asarray(out_shared[1]),
+                                      np.asarray(b.execute(a[1], w[0])))
+
+    def test_dyn_cycles_sources(self, rng):
+        b = backends.resolve("tubgemm", bits=4)
+        q = rand_codes(rng, 4, (16, 8))
+        wc = b.cycles(16)
+        assert b.dyn_cycles(16) == float(wc)
+        assert b.dyn_cycles(16, bit_sparsity=0.5) == pytest.approx(wc * 0.5)
+        measured = b.dyn_cycles(operand=q)
+        assert 0 < measured <= wc
+        # non-sparsity-aware designs ignore the statistic
+        assert backends.resolve("bgemm", bits=4).dyn_cycles(
+            16, bit_sparsity=0.9) == 16.0
+        with pytest.raises(ValueError, match="not both"):
+            b.dyn_cycles(16, bit_sparsity=0.5, operand=q)
+        with pytest.raises(ValueError, match="common_dim"):
+            b.dyn_cycles(bit_sparsity=0.5)
+
+    def test_price_accepts_recorder(self):
+        from repro.core.accounting import GemmWorkloadRecorder
+        rec = GemmWorkloadRecorder()
+        rec.record("l0", m=2, k=32, n_out=32, bit_sparsity=0.3)
+        cost = backends.resolve("tubgemm", bits=4).price(rec, unit_n=32)
+        assert cost.total_macs == 2 * 32 * 32
+
+
+class TestUseBackend:
+    def test_scoping_nesting_and_exception_unwind(self):
+        assert backends.active_backend() is None
+        with backends.use_backend("tubgemm", bits=4) as outer:
+            assert backends.active_backend().name == "tubgemm"
+            with backends.use_backend("bgemm", bits=8):
+                assert backends.active_backend().name == "bgemm"
+            assert backends.active_backend() is outer.backend
+        assert backends.active_backend() is None
+        with pytest.raises(RuntimeError, match="boom"):
+            with backends.use_backend("tubgemm", bits=4):
+                raise RuntimeError("boom")
+        assert backends.active_backend() is None
+
+    def test_dense_contracts_on_backend(self, rng):
+        w = jnp.asarray(rng.normal(0, 0.1, (32, 16)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1.0, (2, 5, 32)), jnp.float32)
+        with backends.use_backend("tubgemm", bits=8) as execution:
+            out = common.dense(w, x)
+        assert execution.calls == [backends.ExecutedGemm(10, 32, 16,
+                                                         "tubgemm", 8)]
+        # manual reference: quantize both operands, int matmul, dequantize
+        wq = quantize(w, bits=8)
+        xq = quantize(x.reshape(-1, 32), bits=8, per_channel=False)
+        want = (gs.bgemm_exact(xq.values, wq.values).astype(jnp.float32)
+                * (xq.scale * wq.scale.reshape(1, -1))).reshape(2, 5, 16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-6)
+        # float path untouched outside the scope
+        np.testing.assert_allclose(np.asarray(common.dense(w, x)),
+                                   np.asarray(x @ w), rtol=1e-5)
+
+    def test_exact_backends_and_kernel_mirror_agree_in_model(self, rng):
+        """Whole-model forward: tubgemm sim and its Pallas mirror produce the
+        same quantized execution (identical int GEMMs -> identical logits)."""
+        from repro import configs
+        from repro.models import model as M
+        cfg = configs.get_smoke_config("internlm2-1.8b").replace(
+            compute_dtype="float32")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 8)), jnp.int32)
+        ref, _ = M.forward(params, cfg, toks)
+        outs = {}
+        for name in ("tubgemm", "tugemm", "tubgemm_pallas"):
+            with backends.use_backend(make(name, 8)) as execution:
+                out, _ = M.forward(params, cfg, toks)
+            assert len(execution.calls) > 0
+            outs[name] = np.asarray(out)
+        np.testing.assert_array_equal(outs["tubgemm"], outs["tugemm"])
+        np.testing.assert_array_equal(outs["tubgemm"], outs["tubgemm_pallas"])
+        agree = float(np.mean(np.argmax(outs["tubgemm"], -1)
+                              == np.argmax(np.asarray(ref), -1)))
+        assert agree > 0.5
+
+    def test_jit_traced_inside_scope_executes_backend(self, rng):
+        w = jnp.asarray(rng.normal(0, 0.1, (16, 8)), jnp.float32)
+        x = jnp.asarray(rng.normal(0, 1.0, (4, 16)), jnp.float32)
+        with backends.use_backend("tubgemm", bits=8) as execution:
+            out = jax.jit(lambda w, x: common.dense(w, x))(w, x)
+            eager = common.dense(w, x)
+        assert len(execution.calls) == 2  # one per trace
+        np.testing.assert_allclose(np.asarray(out), np.asarray(eager),
+                                   rtol=1e-5)
+
+
+class TestRegistrySnapshot:
+    def test_snapshot_restore_roundtrip(self):
+        snap = gs.registry_snapshot()
+        gs.register_design("tmp_design",
+                           exact_fn=lambda a, b, bits: gs.bgemm_exact(a, b),
+                           stream_fn=lambda a, b, bits: (gs.bgemm_exact(a, b), 1),
+                           wc_cycles_fn=lambda bits, k: 1)
+        assert "tmp_design" in gs.DESIGNS
+        gs.registry_restore(snap)
+        assert gs.DESIGNS == BUILTIN
+
+    def test_scoped_registry_nests_and_survives_exceptions(self):
+        def reg(name):
+            gs.register_design(name,
+                               exact_fn=lambda a, b, bits: gs.bgemm_exact(a, b),
+                               stream_fn=lambda a, b, bits: (gs.bgemm_exact(a, b), 1),
+                               wc_cycles_fn=lambda bits, k: 1)
+
+        with gs.scoped_registry():
+            reg("outer_design")
+            with gs.scoped_registry():
+                reg("inner_design")
+                assert {"outer_design", "inner_design"} <= set(gs.DESIGNS)
+            assert "inner_design" not in gs.DESIGNS
+            assert "outer_design" in gs.DESIGNS
+        assert gs.DESIGNS == BUILTIN
+        with pytest.raises(RuntimeError, match="boom"):
+            with gs.scoped_registry():
+                reg("doomed_design")
+                raise RuntimeError("boom")
+        assert gs.DESIGNS == BUILTIN
+
+    def test_kernel_backends_context_nests_and_keeps_designs_synced(self):
+        """The satellite fix: kernels.backends restore goes through the
+        registry API, so gemm_sims.DESIGNS never desyncs from the registry
+        contents — nested scopes and exceptions included."""
+        from repro.kernels import backends as kb
+        assert gs.DESIGNS == BUILTIN
+        with kb.kernel_backends(block=(32, 32, 32), interpret=True):
+            assert set(MIRRORS) <= set(gs.DESIGNS)
+            assert gs.DESIGNS == tuple(gs.registry_snapshot())
+            with kb.kernel_backends(interpret=True):  # overwrite + restore
+                assert set(MIRRORS) <= set(gs.DESIGNS)
+            assert set(MIRRORS) <= set(gs.DESIGNS)  # outer scope intact
+            assert gs.DESIGNS == tuple(gs.registry_snapshot())
+        assert gs.DESIGNS == BUILTIN
+        with pytest.raises(RuntimeError, match="boom"):
+            with kb.kernel_backends(interpret=True):
+                raise RuntimeError("boom")
+        assert gs.DESIGNS == BUILTIN == tuple(gs.registry_snapshot())
+
+
+class TestDeprecationShims:
+    @pytest.fixture(autouse=True)
+    def _reset_once_flags(self):
+        saved = set(gs._DEPRECATION_EMITTED)
+        gs._DEPRECATION_EMITTED.clear()
+        yield
+        gs._DEPRECATION_EMITTED.clear()
+        gs._DEPRECATION_EMITTED.update(saved)
+
+    def _count(self, recorded):
+        return sum(issubclass(w.category, DeprecationWarning) for w in recorded)
+
+    @pytest.mark.parametrize("bits", [2, 4, 8])
+    @pytest.mark.parametrize("design", BUILTIN)
+    def test_shims_bit_identical_to_new_api(self, rng, design, bits):
+        backend = backends.resolve(design, bits=bits)
+        a, w = rand_codes(rng, bits, (4, 8)), rand_codes(rng, bits, (8, 5))
+        ab = jnp.stack([a, a]), jnp.stack([w, w])
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            np.testing.assert_array_equal(np.asarray(gs.gemm(design, a, w, bits)),
+                                          np.asarray(backend.execute(a, w)))
+            s_old, c_old = gs.stream_gemm(design, a, w, bits)
+            s_new, c_new = backend.stream(a, w)
+            np.testing.assert_array_equal(np.asarray(s_old), np.asarray(s_new))
+            assert int(c_old) == int(c_new)
+            np.testing.assert_array_equal(
+                np.asarray(gs.gemm_batched(design, *ab, bits)),
+                np.asarray(backend.execute(*ab)))
+
+    def test_each_shim_warns_exactly_once(self, rng):
+        a, w = rand_codes(rng, 4, (2, 3)), rand_codes(rng, 4, (3, 2))
+        for fn in (lambda: gs.gemm("bgemm", a, w, 4),
+                   lambda: gs.stream_gemm("bgemm", a, w, 4),
+                   lambda: gs.gemm_batched("tubgemm", a, w, 4)):
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                fn()
+                fn()
+            assert self._count(rec) == 1
+
+    def test_register_kernel_backends_warns_once_and_registers(self):
+        from repro.kernels import backends as kb
+        kb._DEPRECATION_EMITTED = False
+        with gs.scoped_registry():
+            with warnings.catch_warnings(record=True) as rec:
+                warnings.simplefilter("always")
+                names = kb.register_kernel_backends(interpret=True)
+                assert kb.register_kernel_backends(interpret=True) == names
+            assert self._count(rec) == 1
+            assert set(names) <= set(gs.DESIGNS)
+        assert gs.DESIGNS == BUILTIN
+
+
+class TestServeExecution:
+    @pytest.fixture(scope="class")
+    def smoke_model(self):
+        from repro import configs
+        from repro.models import model as M
+        cfg = configs.get_smoke_config("llama3-8b")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        return cfg, params
+
+    def test_validate_backend_numerics(self, smoke_model):
+        from repro.launch.serve import validate_backend_numerics
+        cfg, params = smoke_model
+        for name in ("tubgemm", "tugemm", "bgemm"):
+            assert validate_backend_numerics(params, name, bits=4) == 0.0
+        # backend objects work too, defaulting to their own width
+        backend = backends.resolve("tubgemm_pallas", bits=4, interpret=True)
+        assert validate_backend_numerics(params, backend) == 0.0
+        rel = validate_backend_numerics(params, "ugemm", bits=8)
+        assert 0.0 < rel < 0.2
+
+    def test_validate_backend_numerics_no_weights(self):
+        from repro.launch.serve import validate_backend_numerics
+        assert validate_backend_numerics({}, "tubgemm", bits=4) == 0.0
+
+    @pytest.mark.parametrize("name", ["tubgemm", "tugemm", "bgemm", "ugemm"])
+    def test_measured_cycles_within_ppa_bounds(self, smoke_model, name):
+        from repro.launch.serve import measure_decode_cycles
+        cfg, params = smoke_model
+        backend = backends.resolve(name, bits=4)
+        cyc = measure_decode_cycles(cfg, params, backend, batch=4,
+                                    unit_n=128, num_units=64)
+        assert cyc["dyn_floor"] - 0.5 <= cyc["measured"] <= cyc["wc"] + 0.5
+        if backend.spec.sparsity_aware:
+            assert cyc["measured"] < cyc["wc"]
+        else:
+            assert cyc["measured"] == cyc["dyn"] == cyc["wc"]
+
+    def test_measured_cycles_use_executed_per_channel_codes(self, smoke_model):
+        """measured must reflect the per-channel codes dense contracts: with
+        a single outlier element, per-channel quantization keeps every other
+        column's codes saturated (own-scale), so every outer-product step
+        stays gated near vmax -> measured ~ wc.  Per-tensor codes (the bug:
+        everything crushed toward zero by the outlier's global scale) would
+        report ~wc/4 for the same weights."""
+        from repro.launch import serve
+        cfg, params = smoke_model
+        backend = backends.resolve("tubgemm", bits=4)
+        w = np.full((64, 64), 0.1, np.float32)
+        w[0, 0] = 10.0                          # one outlier element
+        fake_params = {"layer": jnp.asarray(w)}
+        cyc = serve.measure_decode_cycles(cfg, fake_params, backend, batch=1,
+                                          unit_n=64, num_units=1)
+        assert cyc["measured"] > 0.8 * cyc["wc"]
+
+    def test_measured_cycles_reuses_provided_stats(self, smoke_model):
+        from repro.launch.serve import build_workload, measure_decode_cycles
+        cfg, params = smoke_model
+        backend = backends.resolve("tubgemm", bits=4)
+        _, stats = build_workload(cfg, params, batch=4, ctx_len=8, bits=4)
+        with_stats = measure_decode_cycles(cfg, params, backend, batch=4,
+                                           unit_n=128, num_units=64,
+                                           stats=stats)
+        fresh = measure_decode_cycles(cfg, params, backend, batch=4,
+                                      unit_n=128, num_units=64)
+        assert with_stats == fresh

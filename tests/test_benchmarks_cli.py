@@ -1,0 +1,40 @@
+"""The benchmarks.run driver CLI: selection, unknown-name handling."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+from benchmarks import run as run_mod  # noqa: E402
+
+
+class TestUnknownBenchmark:
+    def test_unknown_name_exits_nonzero_with_available_list(self, capsys):
+        rc = run_mod.main(["definitely_not_a_benchmark"])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "unknown benchmark(s): definitely_not_a_benchmark" in err
+        assert "available benchmarks:" in err
+        assert "sweetspot" in err and "table1_area" in err
+
+    def test_mixed_known_unknown_still_errors(self, capsys):
+        rc = run_mod.main(["sweetspot", "nope1", "nope2"])
+        assert rc == 2
+        err = capsys.readouterr().err
+        assert "nope1, nope2" in err
+
+    def test_gated_benchmark_selectable_by_name(self):
+        # naming the --full-gated sweep explicitly must not trip the
+        # unknown-name check (it is appended to the known set)
+        specs = run_mod.available_benchmarks(full=True)
+        assert run_mod.GATED_SPEC[0] in specs
+        assert run_mod.GATED_SPEC[0] not in run_mod.available_benchmarks(False)
+
+
+class TestSelection:
+    def test_known_selection_runs_only_named(self, capsys):
+        rc = run_mod.main(["table1_area"])
+        out = capsys.readouterr().out
+        assert rc == 0
+        lines = [l for l in out.splitlines() if "," in l]
+        assert lines[0] == "name,us_per_call,derived"
+        assert len(lines) == 2 and lines[1].startswith("table1_area,")
