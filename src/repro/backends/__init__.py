@@ -1,4 +1,4 @@
-"""First-class GEMM backend API: typed, scoped backend objects.
+"""First-class GEMM backend API: typed, scoped backend objects and plans.
 
 One import surface for everything backend-shaped:
 
@@ -11,27 +11,43 @@ One import surface for everything backend-shaped:
     with backends.use_backend(b):                  # execute the *model* on it
         logits, _ = model.forward(params, cfg, tokens)
 
-See ``docs/BACKENDS.md`` for the protocol, resolve rules, scoping semantics
-and the migration table from the deprecated string-registry calls.
+    plan = backends.BackendPlan.load("reports/plan.json")
+    with backends.use_plan(plan):                  # per-site mixed precision
+        logits, _ = model.forward(params, cfg, tokens)
+
+See ``docs/BACKENDS.md`` for the protocol, resolve rules and scoping
+semantics, and ``docs/PLANNER.md`` for the plan file format, site-pattern
+matching rules and how ``repro.eval.planner`` derives plans.
 """
 
 from repro.backends.base import GemmBackend
+from repro.backends.plan import BackendPlan, SiteAssignment
 from repro.backends.registry import (KERNEL_SIBLINGS, PALLAS_SUFFIX,
                                      available, mirror_design_spec, resolve)
 from repro.backends.runtime import (BackendExecution, ExecutedGemm,
+                                    PlanExecution, SiteRecorder,
                                     active_backend, active_execution,
-                                    use_backend)
+                                    current_site, record_sites, site_scope,
+                                    use_backend, use_plan)
 
 __all__ = [
     "GemmBackend",
+    "BackendPlan",
+    "SiteAssignment",
     "KERNEL_SIBLINGS",
     "PALLAS_SUFFIX",
     "available",
     "mirror_design_spec",
     "resolve",
     "BackendExecution",
+    "PlanExecution",
+    "SiteRecorder",
     "ExecutedGemm",
     "active_backend",
     "active_execution",
+    "current_site",
+    "record_sites",
+    "site_scope",
     "use_backend",
+    "use_plan",
 ]

@@ -1,18 +1,38 @@
-"""Scoped backend execution: :func:`use_backend` threads a backend into
-``models/common.dense`` so the quantized forward pass actually contracts its
-integer tiles on the selected unary engine.
+"""Scoped backend execution: :func:`use_backend` / :func:`use_plan` thread a
+GEMM engine (one global backend, or a per-site :class:`~repro.backends.plan.
+BackendPlan`) into ``models/common.dense`` so the quantized forward pass
+actually contracts its integer tiles on the selected unary engine(s).
 
-The scope is a thread-local stack (nestable, exception-safe).  Inside a
-``with use_backend(...)`` block, every ``dense`` call quantizes both operands
-to the backend's bit-width, contracts the int tiles with
+Both scopes live on one thread-local stack (nestable, exception-safe, the
+innermost scope wins).  Inside a scope, every ``dense`` call asks the scope
+for the backend of its *site* (see the naming contract below), quantizes both
+operands to that backend's bit-width, contracts the int tiles with
 :meth:`GemmBackend.execute`, and dequantizes back to the activation dtype;
-outside any scope the float path runs untouched.
+outside any scope — or when a plan maps the site to no backend — the float
+path runs untouched.
 
-**Jit caveat** — the active backend is read at *trace* time.  A step function
-jitted (traced) outside the scope keeps its float execution when later called
-inside it; build/trace the jitted steps inside the scope (``launch/serve.py
---execute-backend`` does).  For the same reason the execution trace records
-one entry per traced GEMM *site*: a layer body scanned over L layers appears
+**Site-naming contract** (what plan patterns match against).  A GEMM site is
+the parameter-tree path of its weight, ``"/"``-joined:
+
+* model code pushes path segments with :func:`site_scope` (``"layers"`` around
+  the scanned stack, ``"attn"`` / ``"mlp"`` / ``"ssm"`` / ``"tm"`` / ``"cm"``
+  around the sub-module, ``"shared"`` for the hybrid shared block) and passes
+  the weight's leaf key as ``dense(..., name="wq")``;
+* :func:`current_site` joins the live stack with the leaf name, yielding
+  exactly the names ``jax.tree_util.tree_flatten_with_path`` produces for the
+  parameter pytree (``"layers/attn/wq"``, ``"layers/mlp/w_up"``,
+  ``"lm_head"``, …) — the same names ``core.sparsity.profile_tree`` and the
+  serve-time workload recorder use, so profiling, pricing, planning and
+  execution all key on one name;
+* an un-named ``dense`` outside any :func:`site_scope` has site ``""`` (the
+  empty string), which only a wildcard pattern can match.
+
+**Jit caveat** — the active scope, the site stack and the per-site backend
+lookup are all read at *trace* time.  A step function jitted (traced) outside
+the scope keeps its float execution when later called inside it; build/trace
+the jitted steps inside the scope (``launch/serve.py --execute-backend`` and
+``--backend-plan`` do).  For the same reason the execution trace records one
+entry per traced GEMM *site*: a layer body scanned over L layers appears
 once, not L times.
 """
 
@@ -23,38 +43,105 @@ import dataclasses
 import threading
 
 from repro.backends.base import GemmBackend
-from repro.backends.registry import resolve
 
-__all__ = ["ExecutedGemm", "BackendExecution", "use_backend",
-           "active_backend", "active_execution"]
+# NOTE: repro.backends.registry is imported lazily inside use_backend —
+# registry pulls in repro.configs, whose model-config import would close a
+# cycle with the model modules that import site_scope from here.
+
+__all__ = ["ExecutedGemm", "BackendExecution", "PlanExecution",
+           "SiteRecorder", "use_backend", "use_plan", "record_sites",
+           "active_backend", "active_execution", "site_scope", "current_site"]
 
 
 @dataclasses.dataclass(frozen=True)
 class ExecutedGemm:
-    """One GEMM site contracted on the backend (shapes static at trace time)."""
+    """One GEMM site contracted on a backend (shapes static at trace time).
+
+    ``m``/``k``/``n_out`` — the contraction ``(m, k) @ (k, n_out)``;
+    ``backend``/``bits`` — the engine that site ran on; ``site`` — the
+    site name per the module-level naming contract (``""`` for un-named
+    ``dense`` calls outside any :func:`site_scope`).
+    """
 
     m: int
     k: int
     n_out: int
     backend: str
     bits: int
+    site: str = ""
 
 
 class BackendExecution:
     """Live handle for one :func:`use_backend` scope.
 
-    ``backend`` — the resolved :class:`GemmBackend`; ``calls`` — the
-    :class:`ExecutedGemm` sites recorded as the model traces through
-    ``dense`` (see the jit caveat in the module docstring).
+    ``backend`` — the resolved :class:`GemmBackend` every site executes on;
+    ``calls`` — the :class:`ExecutedGemm` sites recorded as the model traces
+    through ``dense`` (see the jit caveat in the module docstring).
     """
 
     def __init__(self, backend: GemmBackend) -> None:
         self.backend = backend
         self.calls: list[ExecutedGemm] = []
 
-    def record(self, m: int, k: int, n_out: int) -> None:
+    def backend_for(self, site: str) -> GemmBackend | None:
+        """The backend ``dense`` must execute ``site`` on (None = float)."""
+        return self.backend
+
+    def record(self, site: str, m: int, k: int, n_out: int,
+               backend: GemmBackend) -> None:
+        """Append one traced GEMM site to ``calls``."""
         self.calls.append(ExecutedGemm(int(m), int(k), int(n_out),
-                                       self.backend.name, self.backend.bits))
+                                       backend.name, backend.bits, str(site)))
+
+    def observe(self, site: str, m: int, k: int, n_out: int) -> None:
+        """Called by ``dense`` for sites the scope maps to NO backend.
+
+        A no-op for execution scopes; :class:`SiteRecorder` overrides it to
+        collect the site inventory.
+        """
+
+
+class PlanExecution(BackendExecution):
+    """Live handle for one :func:`use_plan` scope.
+
+    ``plan`` — the :class:`~repro.backends.plan.BackendPlan`; ``backend`` is
+    None (there is no single engine — :meth:`backend_for` resolves per site).
+    Backends are resolved once per site name and cached for the scope's
+    lifetime, so re-tracing is cheap and every trace sees the same objects.
+    """
+
+    def __init__(self, plan) -> None:
+        super().__init__(backend=None)
+        self.plan = plan
+        self._cache: dict[str, GemmBackend | None] = {}
+
+    def backend_for(self, site: str) -> GemmBackend | None:
+        try:
+            return self._cache[site]
+        except KeyError:
+            backend = self.plan.backend_for(site)
+            self._cache[site] = backend
+            return backend
+
+
+class SiteRecorder(BackendExecution):
+    """Scope that *names* every dense GEMM site without executing on any
+    backend — the planner's discovery pass (see :func:`record_sites`).
+
+    ``backend_for`` always returns None, so the float path runs (or, under
+    ``jax.eval_shape``, merely traces); ``dense`` still records the site name
+    and contraction shape into ``calls`` with backend ``"none"`` / bits 0.
+    """
+
+    def __init__(self) -> None:
+        super().__init__(backend=None)
+
+    def backend_for(self, site: str) -> GemmBackend | None:
+        return None
+
+    def observe(self, site: str, m: int, k: int, n_out: int) -> None:
+        self.calls.append(ExecutedGemm(int(m), int(k), int(n_out),
+                                       "none", 0, str(site)))
 
 
 _TLS = threading.local()
@@ -67,16 +154,67 @@ def _stack() -> list[BackendExecution]:
     return stack
 
 
+def _site_stack() -> list[str]:
+    stack = getattr(_TLS, "sites", None)
+    if stack is None:
+        stack = _TLS.sites = []
+    return stack
+
+
 def active_execution() -> BackendExecution | None:
-    """The innermost live :func:`use_backend` scope, or None."""
+    """The innermost live :func:`use_backend` / :func:`use_plan` /
+    :func:`record_sites` scope, or None."""
     stack = _stack()
     return stack[-1] if stack else None
 
 
 def active_backend() -> GemmBackend | None:
-    """The backend ``dense`` will execute on right now, or None (float path)."""
+    """The single backend ``dense`` executes on right now, or None.
+
+    None outside any scope (float path) and inside :func:`use_plan` /
+    :func:`record_sites` scopes, whose backend is per-site — use
+    :meth:`BackendExecution.backend_for` with a site name there.
+    """
     execution = active_execution()
     return execution.backend if execution is not None else None
+
+
+@contextlib.contextmanager
+def site_scope(segment: str):
+    """Push one ``"/"``-separated path segment onto the site-name stack.
+
+    Model code wraps sub-module forwards so the ``dense`` calls inside
+    compose the parameter-tree path (see the module-level naming contract).
+    Entered at trace time; nests and unwinds on exceptions.
+    """
+    stack = _site_stack()
+    stack.append(str(segment))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def current_site(name: str | None = None) -> str:
+    """The full site name for a leaf ``name`` under the live scopes.
+
+    Joins the :func:`site_scope` stack with ``name`` (omitted if None);
+    returns ``""`` when both are empty.
+    """
+    parts = list(_site_stack())
+    if name:
+        parts.append(str(name))
+    return "/".join(parts)
+
+
+@contextlib.contextmanager
+def _pushed(execution: BackendExecution):
+    stack = _stack()
+    stack.append(execution)
+    try:
+        yield execution
+    finally:
+        stack.remove(execution)
 
 
 @contextlib.contextmanager
@@ -88,11 +226,42 @@ def use_backend(spec: str | GemmBackend, *, bits: int | None = None,
     :class:`BackendExecution` (``.backend``, ``.calls``).  Scopes nest — the
     innermost wins — and unwind correctly on exceptions.
     """
+    from repro.backends.registry import resolve
     execution = BackendExecution(resolve(spec, bits=bits, block=block,
                                          interpret=interpret))
-    stack = _stack()
-    stack.append(execution)
-    try:
+    with _pushed(execution):
         yield execution
-    finally:
-        stack.remove(execution)
+
+
+@contextlib.contextmanager
+def use_plan(plan):
+    """Execute every ``dense`` contraction on the site's planned backend.
+
+    ``plan`` — a :class:`~repro.backends.plan.BackendPlan` (or a path-like /
+    str, loaded via :meth:`BackendPlan.load`).  Each dense site is matched
+    against the plan's patterns (most specific wins, see
+    ``repro.backends.plan``); unmatched sites run the float path.  Yields a
+    :class:`PlanExecution` whose ``.calls`` lists every contracted site with
+    the backend it actually ran on.  Nests with :func:`use_backend`
+    (innermost scope wins) and unwinds on exceptions.
+    """
+    from repro.backends.plan import BackendPlan
+    if not isinstance(plan, BackendPlan):
+        plan = BackendPlan.load(plan)
+    with _pushed(PlanExecution(plan)) as execution:
+        yield execution
+
+
+@contextlib.contextmanager
+def record_sites():
+    """Record every dense GEMM site's name and shape, executing nothing.
+
+    The planner's discovery pass: trace the model inside this scope (cheapest
+    via ``jax.eval_shape`` — no FLOPs run) and read ``.calls`` for the
+    ``(site, m, k, n_out)`` of every GEMM ``models/common.dense`` would
+    contract under a backend scope.  Scanned layer bodies record once (see
+    the jit caveat), so per-site invocation counts come from the parameter
+    shapes, not from this trace.
+    """
+    with _pushed(SiteRecorder()) as execution:
+        yield execution

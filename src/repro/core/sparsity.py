@@ -55,19 +55,41 @@ class SparsityStats:
 
 @partial(jax.jit)
 def word_sparsity(q: jax.Array) -> jax.Array:
+    """Fraction of exactly-zero quantized words.
+
+    Args: ``q`` — integer quantization codes, any shape.
+    Returns: scalar float32 in [0, 1] (dimensionless fraction).
+    """
     return jnp.mean((q == 0).astype(jnp.float32))
 
 
 @partial(jax.jit, static_argnames=("bits",))
 def bit_sparsity_elementwise(q: jax.Array, bits: int) -> jax.Array:
-    # slots per stream = 2^(w-1) (paper convention; see unary.temporal_stream_len)
+    """Element-level bit sparsity: ``1 - mean|q| / L``.
+
+    Args: ``q`` — integer codes; ``bits`` — operand width w, setting the
+    unary stream length ``L = 2^(w-1)`` slots (paper convention; see
+    ``unary.temporal_stream_len``).
+    Returns: scalar float32 in [0, 1).  Upper-bounds the achievable Eq. 1
+    saving — every lane terminating at its own magnitude — and is the
+    ``dyn_floor`` statistic in the serve/planner cycle reports.
+    """
     L = 2 ** (bits - 1)
     return 1.0 - jnp.mean(jnp.abs(q.astype(jnp.float32))) / L
 
 
 @partial(jax.jit, static_argnames=("bits", "block"))
 def bit_sparsity_blockmax(q: jax.Array, bits: int, block: int = 32) -> jax.Array:
-    """1 - mean(max|q| per block x block tile) / Vmax  (paper's LLM method)."""
+    """1 - mean(max|q| per block x block tile) / Vmax  (paper's LLM method).
+
+    Args: ``q`` — integer codes (flattened to 2-D over the trailing axis);
+    ``bits`` — operand width w (``Vmax``-equivalent stream length
+    ``L = 2^(w-1)``); ``block`` — PE-array tile edge (paper uses 32).
+    Returns: scalar float32 in [0, 1) — the **Eq. 1 input**: the shared slot
+    schedule finishes a step only when the largest magnitude per block has
+    streamed out, so this is the latency-relevant statistic.  Padded
+    all-zero blocks are masked out of the mean.
+    """
     L = 2 ** (bits - 1)
     x = jnp.abs(q.astype(jnp.float32))
     if x.ndim == 1:
@@ -87,7 +109,15 @@ def bit_sparsity_blockmax(q: jax.Array, bits: int, block: int = 32) -> jax.Array
 
 def profile_tensor(x: jax.Array, bits: int, block: int = 32,
                    pre_quantized: bool = False) -> SparsityStats:
-    """Quantize (unless already integer codes) and profile one tensor."""
+    """Quantize (unless already integer codes) and profile one tensor.
+
+    Args: ``x`` — float tensor (or integer codes with ``pre_quantized``);
+    ``bits`` — operand width w ∈ {2, 4, 8}; ``block`` — block-max tile edge.
+    Returns: a :class:`SparsityStats` (all statistics dimensionless
+    fractions; ``numel`` the element count used for size-weighted
+    aggregation).  This is the statistic the serve cost tables and the
+    mixed-precision planner (``eval/planner``) feed into Eq. 1.
+    """
     if pre_quantized:
         q = jnp.asarray(x, jnp.int32)
     else:
@@ -105,7 +135,12 @@ def profile_tensor(x: jax.Array, bits: int, block: int = 32,
 
 
 def combine_stats(stats: list[SparsityStats]) -> SparsityStats:
-    """Size-weighted aggregate across tensors (a model's layers)."""
+    """Size-weighted aggregate across tensors (a model's layers).
+
+    Args: ``stats`` — per-tensor stats at one shared ``bits``.
+    Returns: one :class:`SparsityStats` whose fractions are
+    ``numel``-weighted means (Table V's per-model numbers).
+    """
     if not stats:
         raise ValueError("no stats to combine")
     bits = stats[0].bits
@@ -121,6 +156,12 @@ def profile_tree(params, bits: int, block: int = 32,
 
     Skips vectors (norms, biases) by default — the paper profiles GEMM
     operands (conv / FC / attention projection weights).
+
+    Returns ``{name: SparsityStats}`` keyed by the ``"/"``-joined
+    parameter-tree path (``"layers/attn/wq"``) — the same names the
+    backend runtime uses as GEMM *site* names (the naming contract in
+    ``repro.backends.runtime``), so these stats join directly against
+    recorded workloads and backend plans.
     """
     flat = jax.tree_util.tree_flatten_with_path(params)[0]
     out: dict[str, SparsityStats] = {}

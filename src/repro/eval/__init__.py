@@ -4,10 +4,15 @@
   registry, prices every point with ``core.ppa``, finds per-metric winners
   and crossover frontiers, and cross-checks simulator cycle models against
   the Pallas kernels' cycle reports.
+- planner   : the per-layer mixed-precision backend planner — profiles every
+  dense GEMM site's weight sparsity, prices (design, bits) candidates with
+  Eq. 1-scaled dynamic cycles under an accuracy guard, and emits a typed
+  ``repro.backends.BackendPlan`` that ``use_plan`` / ``serve --backend-plan``
+  execute.
 - report    : serializes a sweep to machine-readable JSON and human-readable
   markdown tables (``benchmarks.run sweetspot`` writes both).
 """
 
-from repro.eval import report, sweetspot
+from repro.eval import planner, report, sweetspot
 
-__all__ = ["report", "sweetspot"]
+__all__ = ["planner", "report", "sweetspot"]

@@ -1,0 +1,457 @@
+"""Per-layer mixed-precision backend planner (paper Table V + Eq. 1 + Fig. 3
+composed into a decision).
+
+The paper's sweet-spot conclusion is a *map*, not a winner: which GEMM design
+is cheapest depends on bit-width, matrix size, and — through Eq. 1 — the
+measured weight bit sparsity.  This module turns that map into an executable
+per-site assignment:
+
+1. **Discover** every dense GEMM site of a model with a zero-FLOP
+   ``jax.eval_shape`` trace under ``repro.backends.record_sites`` — the site
+   names and contraction shapes are exactly what ``models/common.dense``
+   executes under a backend scope (see the naming contract in
+   ``repro.backends.runtime``).
+2. **Profile** each site's weight with ``core.sparsity.profile_tensor`` at
+   every candidate bit-width (word / element-bit / block-max-bit sparsity)
+   and measure its quantization error (relative per-output-channel MSE, the
+   accuracy-guard statistic).
+3. **Price** every (site, design, bits) candidate on the ``core.ppa``
+   DLA tiling with Eq. 1 sparsity-scaled dynamic cycles instead of worst
+   case, drop candidates whose quantization error violates the guard, and
+   pick the per-site argmin of the objective.
+4. **Emit** a typed :class:`repro.backends.plan.BackendPlan` — frozen
+   site-pattern → (design, bits) entries with the predicted energy/latency
+   and guard evidence — which ``repro.backends.use_plan`` executes and
+   ``launch/serve.py --backend-plan`` replays.
+
+Because every uniform single-backend assignment that satisfies the guard at
+all sites is in each site's candidate set, the planned total is ≤ the best
+uniform plan's total by construction (tested, together with the
+monotonicity property: more sparsity never raises a temporal design's
+priced dynamic energy).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.backends.plan import BackendPlan, SiteAssignment
+from repro.core import ppa, sparsity
+from repro.core.quantization import quantize
+from repro.core.sparsity import SparsityStats
+
+__all__ = [
+    "DEFAULT_BITS_CANDIDATES",
+    "DEFAULT_DESIGNS",
+    "DEFAULT_MAX_REL_MSE",
+    "GemmSite",
+    "Candidate",
+    "discover_sites",
+    "quantization_rel_mse",
+    "price_site",
+    "site_candidates",
+    "build_plan",
+    "measure_site_cycles",
+    "plan_totals",
+    "to_markdown",
+]
+
+#: candidate operand widths (paper grid); 2-bit usually fails the guard
+DEFAULT_BITS_CANDIDATES: tuple[int, ...] = (2, 4, 8)
+#: exact calibrated designs — stochastic uGEMM is excluded by default so a
+#: planned model stays bit-identical to the binary oracle
+DEFAULT_DESIGNS: tuple[str, ...] = ("tugemm", "tubgemm", "bgemm")
+#: default accuracy guard: per-site relative quantization MSE ceiling
+DEFAULT_MAX_REL_MSE: float = 0.05
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmSite:
+    """One plannable GEMM site of a model.
+
+    ``name`` — the site name per the runtime naming contract (equals the
+    weight's parameter-tree path); ``m``/``k``/``n_out`` — the per-invocation
+    contraction ``(m, k) @ (k, n_out)`` ``dense`` performs there; ``count`` —
+    invocations per forward pass (scanned layers, shared-block applications);
+    ``weight`` — the site's weight as the (count · k, n_out) float32 matrix
+    the contraction consumes, all invocations stacked along rows.
+    """
+
+    name: str
+    m: int
+    k: int
+    n_out: int
+    count: int
+    weight: np.ndarray = dataclasses.field(repr=False, compare=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One priced (design, bits) option for a site."""
+
+    design: str
+    bits: int
+    stats: SparsityStats
+    rel_mse: float
+    guard_ok: bool
+    dyn_energy_uj: float
+    dyn_latency_us: float
+    wc_energy_uj: float
+    wc_latency_us: float
+
+
+def _leaf_index(params) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out[name] = leaf
+    return out
+
+
+def discover_sites(cfg, params, *, batch: int = 1,
+                   seq_len: int = 8) -> list[GemmSite]:
+    """Find every dense GEMM site of ``cfg``'s model, with weights attached.
+
+    Traces one forward pass with ``jax.eval_shape`` inside a
+    ``repro.backends.record_sites`` scope — no FLOPs run — and joins the
+    recorded (site, k, n_out) against the parameter tree.  ``count`` per site
+    is ``leaf.size / (k · n_out)`` (the stacked-layers multiplier), times the
+    number of shared-block applications for the hybrid family's ``shared/…``
+    sites (a scanned body traces once; see the runtime jit caveat).
+
+    ``m`` is reported for a *decode step*: ``batch`` rows per invocation
+    (``seq_len`` only shapes the discovery trace).  Returns sites in model
+    order, deduplicated by name.
+    """
+    from repro import backends
+    from repro.models import model as model_lib
+
+    tokens = jnp.zeros((batch, seq_len), jnp.int32)
+    with backends.record_sites() as rec:
+        if getattr(cfg, "frontend_stub", False):
+            embeds = jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                          jnp.float32)
+            jax.eval_shape(
+                lambda p, e: model_lib.forward(p, cfg, embeds=e)[0],
+                params, embeds)
+        else:
+            jax.eval_shape(lambda p, t: model_lib.forward(p, cfg, t)[0],
+                           params, tokens)
+
+    leaves = _leaf_index(params)
+    shared_applications = 1
+    if getattr(cfg, "family", None) == "hybrid":
+        from repro.models import blocks as blocks_lib
+        shared_applications = blocks_lib.hybrid_counts(cfg)[0]
+
+    sites: list[GemmSite] = []
+    seen: set[str] = set()
+    for call in rec.calls:
+        if call.site in seen:
+            continue
+        seen.add(call.site)
+        leaf = leaves.get(call.site)
+        if leaf is None:
+            raise ValueError(
+                f"recorded site {call.site!r} has no parameter-tree leaf — "
+                "a dense(name=...) annotation disagrees with the param path")
+        w = np.asarray(leaf, np.float32).reshape(-1, call.n_out)
+        count = leaf.size // (call.k * call.n_out)
+        if count * call.k * call.n_out != leaf.size:
+            raise ValueError(
+                f"site {call.site!r}: leaf shape {tuple(leaf.shape)} is not "
+                f"a stack of (k={call.k}, n_out={call.n_out}) matrices")
+        if call.site.startswith("shared/"):
+            count *= shared_applications
+        sites.append(GemmSite(name=call.site, m=max(int(batch), 1),
+                              k=call.k, n_out=call.n_out, count=count,
+                              weight=w))
+    return sites
+
+
+def quantization_rel_mse(w, bits: int) -> float:
+    """Relative quantization MSE of ``w`` at ``bits`` — the guard statistic.
+
+    Per-output-channel symmetric quantization (exactly what
+    ``models/common.dense`` applies to the weight under a backend scope),
+    dequantized and compared to the original: ``mean((w - dq)²) / mean(w²)``.
+    Dimensionless; 0 = lossless, ~0.01–0.03 for 4-bit Gaussian weights,
+    ≫ 0.1 for 2-bit.
+    """
+    w = jnp.asarray(w, jnp.float32)
+    q = quantize(w, bits=bits)
+    dq = q.values.astype(jnp.float32) * q.scale
+    denom = float(jnp.mean(jnp.square(w)))
+    return float(jnp.mean(jnp.square(w - dq))) / max(denom, 1e-30)
+
+
+def price_site(design: str, bits: int, *, m: int, k: int, n_out: int,
+               count: int, bit_sparsity: float, unit_n: int,
+               num_units: int) -> dict[str, float]:
+    """Price one site's per-decode-step cost on a (design, bits) DLA.
+
+    Uses the same ``core.ppa.DLAModel`` tiling the serve cost table uses,
+    with Eq. 1 ``bit_sparsity`` (block-max statistic) scaling the dynamic
+    numbers and 0.0 for the worst case.  Returns µJ / µs totals over the
+    site's ``count`` invocations: ``dyn_energy_uj``, ``dyn_latency_us``,
+    ``wc_energy_uj``, ``wc_latency_us``.
+    """
+    dla = ppa.DLAModel(design=design, bits=bits, n=unit_n,
+                       num_units=num_units)
+    return {
+        "dyn_energy_uj":
+            dla.matmul_energy_nj(m, k, n_out, bit_sparsity) * count * 1e-3,
+        "dyn_latency_us":
+            dla.matmul_latency_ns(m, k, n_out, bit_sparsity) * count * 1e-3,
+        "wc_energy_uj":
+            dla.matmul_energy_nj(m, k, n_out, 0.0) * count * 1e-3,
+        "wc_latency_us":
+            dla.matmul_latency_ns(m, k, n_out, 0.0) * count * 1e-3,
+    }
+
+
+def site_candidates(site: GemmSite, *,
+                    bits_candidates: Sequence[int] = DEFAULT_BITS_CANDIDATES,
+                    designs: Sequence[str] = DEFAULT_DESIGNS,
+                    max_rel_mse: float = DEFAULT_MAX_REL_MSE,
+                    unit_n: int = 64, num_units: int = 64,
+                    block: int = 32) -> list[Candidate]:
+    """Profile and price every (design, bits) candidate for one site.
+
+    The site's stacked weight matrix is profiled per the paper's convention
+    (per-tensor quantization grid, ``block``×``block`` maxima for the Eq. 1
+    statistic); the guard statistic is :func:`quantization_rel_mse` at each
+    bit-width.  ``guard_ok`` is False where ``rel_mse > max_rel_mse``.
+    """
+    out: list[Candidate] = []
+    for bits in bits_candidates:
+        stats = sparsity.profile_tensor(jnp.asarray(site.weight), bits=bits,
+                                        block=block)
+        rel_mse = quantization_rel_mse(site.weight, bits)
+        guard_ok = rel_mse <= max_rel_mse
+        for design in designs:
+            priced = price_site(design, bits, m=site.m, k=site.k,
+                                n_out=site.n_out, count=site.count,
+                                bit_sparsity=stats.bit_blockmax,
+                                unit_n=unit_n, num_units=num_units)
+            out.append(Candidate(design=design, bits=bits, stats=stats,
+                                 rel_mse=rel_mse, guard_ok=guard_ok,
+                                 **priced))
+    return out
+
+
+def _pick(cands: list[Candidate], objective: str) -> tuple[Candidate, bool]:
+    """Per-site argmin of ``objective`` among guard-passing candidates.
+
+    Falls back to the most accurate (lowest rel_mse, then widest) candidates
+    when the guard rejects every bit-width — the returned bool flags the
+    relaxation.  Ties break deterministically by (value, design, bits).
+    """
+    allowed = [c for c in cands if c.guard_ok]
+    relaxed = not allowed
+    if relaxed:
+        best_mse = min(c.rel_mse for c in cands)
+        allowed = [c for c in cands if c.rel_mse == best_mse]
+    return min(allowed, key=lambda c: (getattr(c, objective), c.design,
+                                       c.bits)), relaxed
+
+
+def build_plan(cfg, params, *, batch: int = 1,
+               bits_candidates: Sequence[int] = DEFAULT_BITS_CANDIDATES,
+               designs: Sequence[str] = DEFAULT_DESIGNS,
+               objective: str = "dyn_energy_uj",
+               max_rel_mse: float = DEFAULT_MAX_REL_MSE,
+               unit_n: int = 64, num_units: int = 64,
+               seq_len: int = 8,
+               sites: list[GemmSite] | None = None) -> BackendPlan:
+    """Derive a per-site mixed-precision :class:`BackendPlan` for a model.
+
+    Args: ``cfg``/``params`` — the model; ``batch`` — decode rows per step
+    (prices the tiling; does not change the per-site winner); ``objective``
+    — one of ``dyn_energy_uj`` / ``dyn_latency_us`` / ``wc_energy_uj`` /
+    ``wc_latency_us`` (lower is better); ``unit_n``/``num_units`` — the DLA
+    geometry (n×n PE arrays); ``max_rel_mse`` — the accuracy guard;
+    ``sites`` — optionally a pre-computed :func:`discover_sites` result
+    (callers that also measure cycles reuse one discovery pass).
+
+    Returns a plan whose entries use exact site names as patterns, with
+    ``meta`` carrying the planning inputs, per-(design, bits) uniform
+    baselines, and the planned totals.  The planned total never exceeds the
+    best guard-feasible uniform baseline (per-site argmin over a superset).
+    """
+    if sites is None:
+        sites = discover_sites(cfg, params, batch=batch, seq_len=seq_len)
+    if not sites:
+        raise ValueError("model exposes no dense GEMM sites to plan")
+
+    entries: list[SiteAssignment] = []
+    uniform: dict[tuple[str, int], dict[str, float]] = {
+        (d, b): {"dyn_energy_uj": 0.0, "dyn_latency_us": 0.0,
+                 "wc_energy_uj": 0.0, "wc_latency_us": 0.0, "feasible": True}
+        for d in designs for b in bits_candidates}
+    for site in sites:
+        cands = site_candidates(site, bits_candidates=bits_candidates,
+                                designs=designs, max_rel_mse=max_rel_mse,
+                                unit_n=unit_n, num_units=num_units)
+        best, relaxed = _pick(cands, objective)
+        entries.append(SiteAssignment(
+            pattern=site.name, design=best.design, bits=best.bits,
+            m=site.m, k=site.k, n_out=site.n_out, count=site.count,
+            word=best.stats.word, bit_elem=best.stats.bit_elem,
+            bit_blockmax=best.stats.bit_blockmax,
+            dyn_energy_uj=best.dyn_energy_uj,
+            dyn_latency_us=best.dyn_latency_us,
+            wc_energy_uj=best.wc_energy_uj,
+            wc_latency_us=best.wc_latency_us,
+            rel_mse=best.rel_mse, guard_relaxed=relaxed))
+        for c in cands:
+            tot = uniform[(c.design, c.bits)]
+            if not c.guard_ok:
+                tot["feasible"] = False
+            for key in ("dyn_energy_uj", "dyn_latency_us",
+                        "wc_energy_uj", "wc_latency_us"):
+                tot[key] += getattr(c, key)
+
+    planned = plan_totals(entries)
+    feasible = {f"{d}@{b}": tot for (d, b), tot in uniform.items()
+                if tot["feasible"]}
+    best_uniform = (min(feasible, key=lambda k: feasible[k][objective])
+                    if feasible else None)
+    meta = {
+        "arch": getattr(cfg, "arch_id", None),
+        "objective": objective,
+        "bits_candidates": list(bits_candidates),
+        "designs": list(designs),
+        "max_rel_mse": max_rel_mse,
+        "unit_n": unit_n,
+        "num_units": num_units,
+        "batch": batch,
+        "totals": {
+            "planned": planned,
+            "uniform": {name: {k: v for k, v in tot.items()
+                               if k != "feasible"}
+                        for name, tot in feasible.items()},
+            "uniform_best": best_uniform,
+        },
+    }
+    return BackendPlan(sites=tuple(entries),
+                       meta=tuple(sorted(meta.items())))
+
+
+def measure_site_cycles(site: GemmSite, entry, *, unit_n: int,
+                        num_units: int) -> dict[str, float]:
+    """Measured (operand-driven) decode-step cycles for one planned site.
+
+    Quantizes each of the site's ``count`` per-invocation weight matrices
+    per output channel — exactly what ``models/common.dense`` contracts
+    under the plan — and sums the entry's backend's early-terminating
+    ``dyn_cycles(operand=...)`` over them, times the DLA wave count.
+    Returns cycles per decode step:
+
+    * ``measured`` — operand-driven early termination;
+    * ``dyn`` — the plan's Eq. 1 estimate (worst case × (1 − block-max));
+    * ``dyn_floor`` — Eq. 1 with element-level sparsity (optimistic bound);
+    * ``wc`` — worst case.
+
+    For sparsity-aware designs ``dyn_floor ≤ measured ≤ wc``; designs
+    without early termination report all four equal.
+    """
+    backend = entry.backend()
+    dla = ppa.DLAModel(design=backend.pricing_design, bits=backend.bits,
+                       n=unit_n, num_units=num_units)
+    waves = math.ceil(dla.tiles(site.m, site.n_out) / num_units)
+    # A site's count can exceed its physical weight copies (the hybrid
+    # shared block applies one weight n_groups times per step): measure the
+    # physical copies, scale by applications.
+    copies = site.weight.shape[0] // site.k
+    applications = site.count // copies
+    w3 = site.weight.reshape(copies, site.k, site.n_out)
+    measured = 0.0
+    for i in range(copies):
+        q = quantize(jnp.asarray(w3[i]), bits=backend.bits).values
+        measured += float(backend.dyn_cycles(operand=q))
+    measured *= applications
+    wc = float(backend.cycles(site.k)) * site.count
+    return {
+        "measured": measured * waves,
+        "dyn": float(backend.dyn_cycles(site.k,
+                                        bit_sparsity=entry.bit_blockmax))
+        * site.count * waves,
+        "dyn_floor": float(backend.dyn_cycles(site.k,
+                                              bit_sparsity=entry.bit_elem))
+        * site.count * waves,
+        "wc": wc * waves,
+    }
+
+
+def plan_totals(entries) -> dict[str, float]:
+    """Summed predicted cost of a plan's entries (µJ / µs per decode step)."""
+    keys = ("dyn_energy_uj", "dyn_latency_us", "wc_energy_uj",
+            "wc_latency_us")
+    return {k: sum(getattr(e, k) for e in entries) for k in keys}
+
+
+def to_markdown(plan: BackendPlan) -> str:
+    """Human-readable rendering of a plan (the ``reports/plan.md`` body)."""
+    meta = plan.metadata()
+    totals = meta.get("totals", {})
+    planned = totals.get("planned", {})
+    lines = [
+        "# Per-layer mixed-precision backend plan",
+        "",
+        f"Arch: `{meta.get('arch')}` — objective `{meta.get('objective')}` "
+        f"on a {meta.get('num_units')}× {meta.get('unit_n')}×"
+        f"{meta.get('unit_n')} DLA, decode batch {meta.get('batch')}.",
+        f"Candidates: designs {meta.get('designs')} × bits "
+        f"{meta.get('bits_candidates')}; accuracy guard rel. quant MSE ≤ "
+        f"{meta.get('max_rel_mse')}.",
+        "",
+        "| site | backend | bits | b_spa (blockmax) | dyn energy (µJ) | "
+        "dyn latency (µs) | rel MSE | guard |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for e in plan.sites:
+        guard = "relaxed" if e.guard_relaxed else "ok"
+        lines.append(
+            f"| `{e.pattern}` ×{e.count} | {e.design} | {e.bits} | "
+            f"{e.bit_blockmax:.3f} | {e.dyn_energy_uj:.4f} | "
+            f"{e.dyn_latency_us:.4f} | {e.rel_mse:.4f} | {guard} |")
+    lines += [
+        "",
+        f"**Planned totals**: {planned.get('dyn_energy_uj', 0.0):.4f} µJ "
+        f"dyn energy, {planned.get('dyn_latency_us', 0.0):.4f} µs dyn "
+        "latency per decode step.",
+        "",
+        "## Uniform single-backend baselines (guard-feasible)",
+        "",
+        "| uniform backend | dyn energy (µJ) | dyn latency (µs) | "
+        "wc energy (µJ) |",
+        "|---|---|---|---|",
+    ]
+    uniform = totals.get("uniform", {})
+    for name in sorted(uniform):
+        tot = uniform[name]
+        mark = " ← best" if name == totals.get("uniform_best") else ""
+        lines.append(f"| {name}{mark} | {tot['dyn_energy_uj']:.4f} | "
+                     f"{tot['dyn_latency_us']:.4f} | "
+                     f"{tot['wc_energy_uj']:.4f} |")
+    distinct = ", ".join(f"{d}@{b}" for d, b in plan.distinct_backends())
+    lines += [
+        "",
+        f"Distinct backends chosen: {distinct}.",
+        "",
+        "Per-site argmin over the same candidate set makes the planned "
+        "total ≤ every guard-feasible uniform baseline by construction; "
+        "`repro.backends.use_plan` executes this mapping and "
+        "`serve --backend-plan` replays it with bit-exactness checks.",
+        "",
+    ]
+    return "\n".join(lines)

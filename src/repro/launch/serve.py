@@ -1,6 +1,6 @@
 """Batched serving driver: prefill + decode with unary-DLA energy accounting.
 
-This is where the paper's technique meets the serving stack, in two modes:
+This is where the paper's technique meets the serving stack:
 
 * **pricing** (always on): every quantized GEMM in the model is priced on a
   chosen unary/binary PE-array backend (--gemm-backend, --bits) using the
@@ -13,9 +13,19 @@ This is where the paper's technique meets the serving stack, in two modes:
   the int GEMMs' bit-exactness vs the binary oracle, the output drift vs the
   float model, and the measured cycle totals against the priced dyn/wc
   bounds.
+* **planning** (``serve plan``): derive a per-layer mixed-precision backend
+  plan for the served config (``repro.eval.planner``), save it to
+  ``--plan-out``, and report predicted vs uniform-backend energy plus the
+  measured decode-cycle totals per site.
+* **plan replay** (--backend-plan FILE): execute prefill+decode with every
+  dense site contracted on the backend its plan entry names, with the same
+  bit-exactness / drift / cycle-bounds evidence as --execute-backend, per
+  site.
 
+    PYTHONPATH=src python -m repro.launch.serve plan --arch llama3-8b \
+        --smoke --unit-n 64 --plan-out reports/plan.json
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
-        --execute-backend tubgemm --bits 4 --tokens 8
+        --backend-plan reports/plan.json --tokens 8
 """
 
 from __future__ import annotations
@@ -33,6 +43,7 @@ from repro import configs
 from repro.core import accounting, ppa, sparsity
 from repro.core import gemm_sims as gemm_sims_lib
 from repro.core.quantization import quantize
+from repro.eval import planner as planner_lib
 from repro.eval import sweetspot as sweetspot_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import single_device_mesh
@@ -230,8 +241,113 @@ def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
     }
 
 
+def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
+                       *, ref_logits=None) -> dict:
+    """Execute prefill+decode under ``use_plan`` and collect the evidence.
+
+    Like :func:`run_backend_execution` but per-site: every dense site
+    contracts on the backend its plan entry names (unmatched sites stay
+    float).  Returns generated ``tokens``, the ``site_backends`` mapping
+    actually traced, per-distinct-backend int-GEMM ``rel_rmse`` vs the
+    binary oracle, prefill ``drift`` / ``top1_agreement`` vs the float
+    model, wall time, and per-site measured/dyn/floor/wc decode-cycle
+    totals (``site_cycles``, DLA geometry from the plan's meta).
+    """
+    if ref_logits is None:
+        ref_logits = prefill_logits(cfg, params, mesh, prompt)
+    t0 = time.time()
+    with backends_lib.use_plan(plan) as execution:
+        tokens = generate(cfg, params, mesh, prompt, max_new)
+        exec_logits = prefill_logits(cfg, params, mesh, prompt)
+    wall = time.time() - t0
+    if not execution.calls:
+        raise RuntimeError(
+            "plan execution contracted no GEMM sites — do the plan's "
+            "patterns match this model's site names?")
+    site_backends = {c.site: f"{c.backend}@{c.bits}" for c in execution.calls}
+    rel_rmse = {
+        f"{design}@{bits}": validate_backend_numerics(
+            params, backends_lib.resolve(design, bits=bits))
+        for design, bits in plan.distinct_backends()
+        if any(f"{design}@{bits}" == tag for tag in site_backends.values())}
+    ref = np.asarray(ref_logits, np.float32)
+    got = np.asarray(exec_logits, np.float32)
+    meta = plan.metadata()
+    unit_n = int(meta.get("unit_n", 64))
+    num_units = int(meta.get("num_units", 64))
+    sites = {s.name: s for s in planner_lib.discover_sites(
+        cfg, params, batch=prompt.shape[0])}
+    site_cycles = {}
+    for entry in plan.sites:
+        site = sites.get(entry.pattern)
+        if site is not None and entry.pattern in site_backends:
+            site_cycles[entry.pattern] = planner_lib.measure_site_cycles(
+                site, entry, unit_n=unit_n, num_units=num_units)
+    return {
+        "tokens": tokens,
+        "site_backends": site_backends,
+        "wall_s": wall,
+        "rel_rmse": rel_rmse,
+        "drift": gemm_sims_lib.rel_rmse(got, ref),
+        "top1_agreement": float(np.mean(np.argmax(got, -1)
+                                        == np.argmax(ref, -1))),
+        "site_cycles": site_cycles,
+    }
+
+
+def run_plan_mode(args, cfg, params) -> int:
+    """``serve plan``: derive, save and report a mixed-precision plan."""
+    site_list = planner_lib.discover_sites(cfg, params, batch=args.batch)
+    plan = planner_lib.build_plan(
+        cfg, params, batch=args.batch, unit_n=args.unit_n,
+        num_units=args.units, sites=site_list)
+    path = plan.save(args.plan_out)
+    meta = plan.metadata()
+    totals = meta["totals"]
+    sites = {s.name: s for s in site_list}
+
+    print(f"\n=== backend plan for {args.arch} "
+          f"({args.units}x {args.unit_n}x{args.unit_n} units, objective "
+          f"{meta['objective']}) ===")
+    print(f"{'site':>24s} {'backend':>12s} {'b_spa':>6s} {'dynE_uJ':>9s} "
+          f"{'relMSE':>7s} {'measured_cyc':>13s} {'wc_cyc':>10s}")
+    for e in plan.sites:
+        cyc = planner_lib.measure_site_cycles(
+            sites[e.pattern], e, unit_n=args.unit_n, num_units=args.units)
+        print(f"{e.pattern:>24s} {e.design + '@' + str(e.bits):>12s} "
+              f"{e.bit_blockmax:6.3f} {e.dyn_energy_uj:9.4f} "
+              f"{e.rel_mse:7.4f} {cyc['measured']:13.1f} {cyc['wc']:10.1f}")
+    planned = totals["planned"]
+    print(f"\nplanned dyn energy {planned['dyn_energy_uj']:.4f} uJ / decode "
+          f"step (wc {planned['wc_energy_uj']:.4f} uJ)")
+    for name in sorted(totals["uniform"]):
+        tot = totals["uniform"][name]
+        mark = " <-- best uniform" if name == totals["uniform_best"] else ""
+        print(f"  uniform {name:>12s}: dyn {tot['dyn_energy_uj']:.4f} uJ"
+              f"{mark}")
+    best = totals["uniform_best"]
+    if best is not None:
+        saving = 1.0 - planned["dyn_energy_uj"] \
+            / max(totals["uniform"][best]["dyn_energy_uj"], 1e-30)
+        print(f"plan vs best uniform ({best}): {saving:.2%} predicted "
+              f"energy saving")
+    distinct = plan.distinct_backends()
+    print(f"distinct backends chosen: "
+          f"{', '.join(f'{d}@{b}' for d, b in distinct)} "
+          f"({'mixed' if len(distinct) > 1 else 'uniform'} assignment)")
+    print(f"plan saved to {path} (replay: serve --arch {args.arch}"
+          f"{' --smoke' if args.smoke else ''} --backend-plan {path})")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
+    ap.add_argument("mode", nargs="?", default="serve",
+                    choices=["serve", "plan"],
+                    help="'serve' generates tokens (default); 'plan' derives "
+                         "+ saves a per-layer mixed-precision backend plan "
+                         "for the config and reports predicted vs uniform "
+                         "energy and measured per-site decode cycles")
     ap.add_argument("--arch", default="llama3-8b", choices=list(configs.ARCH_IDS))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -245,6 +361,13 @@ def main() -> int:
                     help="also EXECUTE prefill/decode with every quantized "
                          "dense layer contracted on this backend "
                          "(simulated design or *_pallas kernel mirror)")
+    ap.add_argument("--backend-plan", default=None, metavar="FILE",
+                    help="execute prefill/decode with every dense site "
+                         "contracted on the backend its plan entry names "
+                         "(a JSON file from 'serve plan' or "
+                         "benchmarks.run plan)")
+    ap.add_argument("--plan-out", default="reports/plan.json",
+                    help="where 'serve plan' saves the derived plan")
     ap.add_argument("--bits", type=int, default=4, choices=[2, 4, 8])
     ap.add_argument("--unit-n", type=int, default=128)
     ap.add_argument("--units", type=int, default=64)
@@ -257,6 +380,8 @@ def main() -> int:
     mesh = single_device_mesh()
     with mesh:
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    if args.mode == "plan":
+        return run_plan_mode(args, cfg, params)
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)
@@ -334,6 +459,48 @@ def main() -> int:
               f"{in_bounds} (priced Eq.1 dyn {priced_dyn:.3e})")
         if not in_bounds:
             print("WARNING: measured cycles outside the priced dyn/wc bounds")
+            return 1
+
+    # --- end-to-end execution on a per-site mixed-precision plan ------------
+    if args.backend_plan:
+        plan = backends_lib.BackendPlan.load(args.backend_plan)
+        distinct = plan.distinct_backends()
+        print(f"\n=== executing model on backend plan {args.backend_plan} "
+              f"({', '.join(f'{d}@{b}' for d, b in distinct)}) ===")
+        result = run_plan_execution(cfg, params, mesh, prompt, plan,
+                                    args.tokens)
+        qt = result["tokens"]
+        print(f"generated {qt.shape} tokens in {result['wall_s']:.2f}s; "
+              f"{len(result['site_backends'])} dense GEMM sites contracted:")
+        for site, tag in sorted(result["site_backends"].items()):
+            print(f"  {site:>24s} -> {tag}")
+        ok = True
+        for tag, rel in sorted(result["rel_rmse"].items()):
+            design = tag.split("@")[0]
+            exact = backends_lib.resolve(design).exact
+            label = "bit-exact" if rel == 0.0 else f"relRMSE {rel:.2e}"
+            print(f"int GEMMs vs binary oracle on {tag}: {label}")
+            if exact and rel != 0.0:
+                ok = False
+        print(f"output drift vs float model (prefill logits): "
+              f"relRMSE {result['drift']:.3f}, "
+              f"top-1 agreement {result['top1_agreement']:.1%}")
+        total = {"measured": 0.0, "dyn": 0.0, "dyn_floor": 0.0, "wc": 0.0}
+        for site, cyc in sorted(result["site_cycles"].items()):
+            in_bounds = (cyc["dyn_floor"] - 0.5 <= cyc["measured"]
+                         <= cyc["wc"] + 0.5)
+            ok = ok and in_bounds
+            for key in total:
+                total[key] += cyc[key]
+            print(f"  {site:>24s} cycles: measured {cyc['measured']:.3e} in "
+                  f"[floor {cyc['dyn_floor']:.3e}, wc {cyc['wc']:.3e}]: "
+                  f"{in_bounds} (planned Eq.1 dyn {cyc['dyn']:.3e})")
+        print(f"per-decode-token cycle totals: measured {total['measured']:.3e}"
+              f" within [dyn floor {total['dyn_floor']:.3e}, "
+              f"wc {total['wc']:.3e}] (planned Eq.1 dyn {total['dyn']:.3e})")
+        if not ok:
+            print("WARNING: plan replay violated bit-exactness or cycle "
+                  "bounds")
             return 1
     return 0
 

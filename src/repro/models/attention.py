@@ -290,9 +290,9 @@ def attention_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
 
 def _gqa_fwd(params, x, cfg, *, positions, cache, cache_pos, kv_valid_len):
     h, hd = cfg.num_heads, cfg.resolved_head_dim
-    q = dense(params["wq"], x, cfg)                    # (B,S,H,hd)
-    k = dense(params["wk"], x, cfg)                    # (B,S,KVH,hd)
-    v = dense(params["wv"], x, cfg)
+    q = dense(params["wq"], x, cfg, name="wq")         # (B,S,H,hd)
+    k = dense(params["wk"], x, cfg, name="wk")         # (B,S,KVH,hd)
+    v = dense(params["wv"], x, cfg, name="wv")
     q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
     k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
     q = shard(q, "batch", None, "heads", "head_dim")
@@ -338,8 +338,19 @@ def _gqa_fwd(params, x, cfg, *, positions, cache, cache_pos, kv_valid_len):
 
 
 def _out_proj(params, attn_out, cfg):
-    """(B,S,H,hd) x (H,hd,D) -> (B,S,D)."""
+    """(B,S,H,hd) x (H,hd,D) -> (B,S,D).
+
+    Under a backend/plan scope the contraction is routed through ``dense``
+    as the flattened (H*hd, D) GEMM so the output projection is a plannable
+    site (``…/attn/wo``) and contracts on the scoped engine; the float path
+    keeps the original einsum (identical math, unchanged sharding).
+    """
     wo = params["wo"]
+    from repro.backends import runtime as backend_runtime
+    if backend_runtime.active_execution() is not None:
+        h, hd, d = wo.shape
+        x2 = attn_out.reshape(*attn_out.shape[:-2], h * hd)
+        return dense(wo.reshape(h * hd, d), x2, cfg, name="wo")
     return jnp.einsum("bshd,hde->bse", attn_out, wo.astype(attn_out.dtype))
 
 
@@ -347,14 +358,16 @@ def _mla_fwd(params, x, cfg, *, positions, cache, cache_pos, kv_valid_len):
     m = cfg.mla
     h = cfg.num_heads
     # Query path: low-rank down -> norm -> up, split nope/rope.
-    cq = rmsnorm(params["q_norm"], dense(params["w_dq"], x, cfg), cfg.rms_eps)
-    q = dense(params["w_uq"], cq, cfg)                 # (B,S,H,nope+rope)
+    cq = rmsnorm(params["q_norm"], dense(params["w_dq"], x, cfg, name="w_dq"),
+                 cfg.rms_eps)
+    q = dense(params["w_uq"], cq, cfg, name="w_uq")    # (B,S,H,nope+rope)
     q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
     q_rope = rope_lib.apply_rope(q_rope, positions, cfg.rope_theta)
 
     # KV latent path.
-    ckv = rmsnorm(params["kv_norm"], dense(params["w_dkv"], x, cfg), cfg.rms_eps)
-    krope = dense(params["w_kr"], x, cfg)[:, :, None, :]   # (B,S,1,rd)
+    ckv = rmsnorm(params["kv_norm"],
+                  dense(params["w_dkv"], x, cfg, name="w_dkv"), cfg.rms_eps)
+    krope = dense(params["w_kr"], x, cfg, name="w_kr")[:, :, None, :]  # (B,S,1,rd)
     krope = rope_lib.apply_rope(krope, positions, cfg.rope_theta)[:, :, 0]
 
     if cache is not None:
@@ -386,8 +399,8 @@ def _mla_fwd(params, x, cfg, *, positions, cache, cache_pos, kv_valid_len):
     else:
         new_cache = None
         # Train/prefill: materialize per-head K/V from the latent.
-        k_nope = dense(params["w_uk"], ckv, cfg)          # (B,S,H,nope)
-        vfull = dense(params["w_uv"], ckv, cfg)           # (B,S,H,vd)
+        k_nope = dense(params["w_uk"], ckv, cfg, name="w_uk")  # (B,S,H,nope)
+        vfull = dense(params["w_uv"], ckv, cfg, name="w_uv")   # (B,S,H,vd)
         kr = jnp.broadcast_to(krope[:, :, None, :],
                               (*krope.shape[:2], h, m.rope_head_dim))
         k = jnp.concatenate([k_nope, kr], axis=-1)

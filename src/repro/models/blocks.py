@@ -23,6 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.backends.runtime import site_scope
 from repro.models import attention as attn_lib
 from repro.models import moe as moe_lib
 from repro.models import rwkv as rwkv_lib
@@ -97,21 +98,26 @@ def hybrid_counts(cfg: ModelConfig) -> tuple[int, int, int]:
 def _transformer_block(layer_params, x, cfg: ModelConfig, *, positions,
                        cache, cache_pos, kv_valid_len):
     h = rmsnorm(layer_params["ln1"], x, cfg.rms_eps)
-    attn_out, new_cache = attn_lib.attention_fwd(
-        layer_params["attn"], h, cfg, positions=positions, cache=cache,
-        cache_pos=cache_pos, kv_valid_len=kv_valid_len)
+    with site_scope("attn"):
+        attn_out, new_cache = attn_lib.attention_fwd(
+            layer_params["attn"], h, cfg, positions=positions, cache=cache,
+            cache_pos=cache_pos, kv_valid_len=kv_valid_len)
     x = x + attn_out
     h = rmsnorm(layer_params["ln2"], x, cfg.rms_eps)
     if cfg.is_moe:
-        out, aux = moe_lib.moe_fwd(layer_params["moe"], h, cfg)
+        with site_scope("moe"):
+            out, aux = moe_lib.moe_fwd(layer_params["moe"], h, cfg)
     else:
-        out, aux = mlp_fwd(layer_params["mlp"], h, cfg), jnp.float32(0.0)
+        with site_scope("mlp"):
+            out, aux = mlp_fwd(layer_params["mlp"], h, cfg), jnp.float32(0.0)
     return x + out, new_cache, aux
 
 
 def _mamba_block(layer_params, x, cfg: ModelConfig, *, cache):
     h = rmsnorm(layer_params["ln"], x, cfg.rms_eps)
-    out, new_cache = ssm_lib.ssm_fwd(layer_params["ssm"], h, cfg, cache=cache)
+    with site_scope("ssm"):
+        out, new_cache = ssm_lib.ssm_fwd(layer_params["ssm"], h, cfg,
+                                         cache=cache)
     return x + out, new_cache
 
 
@@ -136,7 +142,8 @@ def stack_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
         def body(carry, xs):
             xc = carry
             lp, lc = xs
-            out, nc = rwkv_lib.rwkv_block_fwd(lp, xc, cfg, cache=lc)
+            with site_scope("layers"):
+                out, nc = rwkv_lib.rwkv_block_fwd(lp, xc, cfg, cache=lc)
             return out, nc
         body = _maybe_remat(body, cfg)
         lc = caches["rwkv"] if caches is not None else None
@@ -147,7 +154,8 @@ def stack_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
         def body(carry, xs):
             xc = carry
             lp, lc = xs
-            out, nc = _mamba_block(lp, xc, cfg, cache=lc)
+            with site_scope("layers"):
+                out, nc = _mamba_block(lp, xc, cfg, cache=lc)
             return out, nc
         body = _maybe_remat(body, cfg)
         lc = caches["ssm"] if caches is not None else None
@@ -158,9 +166,10 @@ def stack_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
     def body(carry, xs):
         xc, aux = carry
         lp, lc = xs
-        out, nc, a = _transformer_block(lp, xc, cfg, positions=positions,
-                                        cache=lc, cache_pos=cache_pos,
-                                        kv_valid_len=kv_valid_len)
+        with site_scope("layers"):
+            out, nc, a = _transformer_block(lp, xc, cfg, positions=positions,
+                                            cache=lc, cache_pos=cache_pos,
+                                            kv_valid_len=kv_valid_len)
         return (out, aux + a), nc
     body = _maybe_remat(body, cfg)
     lc = caches["attn"] if caches is not None else None
@@ -184,7 +193,8 @@ def _hybrid_fwd(params, x, cfg, *, positions, caches, cache_pos, kv_valid_len):
 
     def mamba_body(xc, xs):
         lp, lc = xs
-        out, nc = _mamba_block(lp, xc, cfg, cache=lc)
+        with site_scope("layers"):
+            out, nc = _mamba_block(lp, xc, cfg, cache=lc)
         return out, nc
     mamba_body = _maybe_remat(mamba_body, cfg)
 
@@ -195,12 +205,14 @@ def _hybrid_fwd(params, x, cfg, *, positions, caches, cache_pos, kv_valid_len):
         else:
             xc, new_ssm = _scan_layers(mamba_body, xc, grp_params, None)
         h = rmsnorm(shared["ln1"], xc, cfg.rms_eps)
-        attn_out, new_attn = attn_lib.attention_fwd(
-            shared["attn"], h, cfg, positions=positions, cache=attn_cache,
-            cache_pos=cache_pos, kv_valid_len=kv_valid_len)
+        with site_scope("shared"), site_scope("attn"):
+            attn_out, new_attn = attn_lib.attention_fwd(
+                shared["attn"], h, cfg, positions=positions, cache=attn_cache,
+                cache_pos=cache_pos, kv_valid_len=kv_valid_len)
         xc = xc + attn_out
         h = rmsnorm(shared["ln2"], xc, cfg.rms_eps)
-        xc = xc + mlp_fwd(shared["mlp"], h, cfg)
+        with site_scope("shared"), site_scope("mlp"):
+            xc = xc + mlp_fwd(shared["mlp"], h, cfg)
         return xc, (new_ssm, new_attn)
 
     # reshape stacked (L, ...) params into (n_groups, gsize, ...)

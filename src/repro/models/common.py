@@ -236,16 +236,24 @@ def dtype_of(name: str):
 # ---------------------------------------------------------------------------
 
 def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
-          out_logical: tuple[str | None, ...] | None = None) -> jax.Array:
+          out_logical: tuple[str | None, ...] | None = None,
+          name: str | None = None) -> jax.Array:
     """x @ w with optional unary-backend quantized execution.
+
+    ``name`` — the weight's parameter-tree leaf key (``"wq"``, ``"w_up"``…).
+    Combined with the live ``repro.backends.site_scope`` stack it forms the
+    GEMM's *site name* (``"layers/attn/wq"``), which per-site backend plans
+    match against; see the naming contract in ``repro.backends.runtime``.
 
     Execution precedence:
 
-    1. An active ``repro.backends.use_backend(...)`` scope — both operands
-       are quantized to the backend's bit-width and the int tiles are
-       contracted on the backend engine (simulator or Pallas kernel), then
-       dequantized back to the activation dtype.  The backend is read at
-       trace time; see ``repro.backends.runtime`` for the jit caveat.
+    1. An active ``repro.backends.use_backend(...)`` / ``use_plan(...)``
+       scope — the scope names the backend for this site (a plan may name
+       none, falling through to the float path); both operands are quantized
+       to the backend's bit-width and the int tiles are contracted on the
+       backend engine (simulator or Pallas kernel), then dequantized back to
+       the activation dtype.  The scope is read at trace time; see
+       ``repro.backends.runtime`` for the jit caveat.
     2. ``cfg.quant_kernel`` — the Pallas packed-integer kernel (the paper's
        PE array stand-in).  tuGEMM/tubGEMM/bGEMM are numerically identical
        (deterministic integer GEMM); uGEMM adds its stochastic multiplier
@@ -255,7 +263,18 @@ def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
     from repro.backends import runtime as backend_runtime
     execution = backend_runtime.active_execution()
     if execution is not None:
-        return _backend_matmul(execution, w, x)
+        site = backend_runtime.current_site(name)
+        backend = execution.backend_for(site)
+        if backend is not None:
+            return _backend_matmul(execution, backend, site, w, x)
+        k = w.shape[0]
+        execution.observe(site, m=math.prod(x.shape[:-1]), k=k,
+                          n_out=w.size // k)
+        # A live scope owns execution: sites its plan leaves unmatched run
+        # FLOAT (the documented contract) — never the cfg.quant_kernel path,
+        # which would silently mix a second quantization scheme into the
+        # plan's drift/bit-exactness evidence.
+        return _plain_matmul(x, w)
     if cfg is not None and cfg.quant_bits is not None and cfg.quant_kernel:
         from repro.kernels import ops as kops
         w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
@@ -272,8 +291,10 @@ def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
     return _plain_matmul(x, w)
 
 
-def _backend_matmul(execution, w: jax.Array, x: jax.Array) -> jax.Array:
-    """Contract ``x @ w`` on the scope's GEMM backend as integer tiles.
+def _backend_matmul(execution, backend, site: str, w: jax.Array,
+                    x: jax.Array) -> jax.Array:
+    """Contract ``x @ w`` on ``backend`` (the scope's choice for ``site``)
+    as integer tiles.
 
     Both operands are quantized at the backend's bit-width — the hardware
     units consume w-bit codes on both ports — weights per output channel,
@@ -283,14 +304,14 @@ def _backend_matmul(execution, w: jax.Array, x: jax.Array) -> jax.Array:
     the integer result; cycle accounting prices the weight-streamed
     schedule, see ``launch/serve.py``).
     """
-    backend = execution.backend
     w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
     x2 = x.reshape(-1, x.shape[-1])
     wq = quantize(w2.astype(jnp.float32), bits=backend.bits)
     xq = quantize(x2.astype(jnp.float32), bits=backend.bits, per_channel=False)
     out = backend.execute(xq.values, wq.values)
     out = out.astype(jnp.float32) * (xq.scale * wq.scale.reshape(1, -1))
-    execution.record(m=x2.shape[0], k=w2.shape[0], n_out=w2.shape[1])
+    execution.record(site, m=x2.shape[0], k=w2.shape[0], n_out=w2.shape[1],
+                     backend=backend)
     return out.astype(x.dtype).reshape(*x.shape[:-1], *w.shape[1:])
 
 

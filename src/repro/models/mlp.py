@@ -32,13 +32,13 @@ def _act(cfg: ModelConfig, g: jax.Array) -> jax.Array:
 
 
 def mlp_fwd(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
-    up = dense(params["w_up"], x, cfg)
+    up = dense(params["w_up"], x, cfg, name="w_up")
     up = shard(up, "batch", None, "mlp")
     if "w_gate" in params:
-        gate = dense(params["w_gate"], x, cfg)
+        gate = dense(params["w_gate"], x, cfg, name="w_gate")
         gate = shard(gate, "batch", None, "mlp")
         h = _act(cfg, gate) * up
     else:
         h = _act(cfg, up)
-    out = dense(params["w_down"], h, cfg)
+    out = dense(params["w_down"], h, cfg, name="w_down")
     return shard(out, "batch", None, None)

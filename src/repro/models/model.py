@@ -18,9 +18,9 @@ import jax.numpy as jnp
 
 from repro.models import attention as attn_lib
 from repro.models import blocks as blocks_lib
-from repro.models.common import (ParamDef, dtype_of, embed_lookup, init_tree,
-                                 logits_from_embedding, pspec_tree, rmsnorm,
-                                 rules_for, shard)
+from repro.models.common import (ParamDef, dense, dtype_of, embed_lookup,
+                                 init_tree, logits_from_embedding, pspec_tree,
+                                 rmsnorm, rules_for, shard)
 from repro.models.config import ModelConfig
 
 __all__ = [
@@ -103,9 +103,18 @@ def _embed_in(params, cfg: ModelConfig, tokens=None, embeds=None):
 def _logits_out(params, cfg: ModelConfig, x):
     x = rmsnorm(params["final_norm"], x, cfg.rms_eps)
     if cfg.tie_embeddings:
+        # tied head: the transposed-embedding matmul stays float (the
+        # backend/plan scopes cover weight-stationary GEMM sites)
         logits = logits_from_embedding(params["embed"], x, cfg.logit_softcap)
     else:
-        logits = jnp.matmul(x, params["lm_head"].astype(x.dtype))
+        from repro.backends import runtime as backend_runtime
+        if backend_runtime.active_execution() is not None:
+            # plannable "lm_head" site under a backend/plan scope; outside
+            # any scope the head keeps its historical plain-float matmul
+            # (in particular it never enters the cfg.quant_kernel path)
+            logits = dense(params["lm_head"], x, cfg, name="lm_head")
+        else:
+            logits = jnp.matmul(x, params["lm_head"].astype(x.dtype))
         if cfg.logit_softcap is not None:
             logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return shard(logits, "batch", None, "vocab")

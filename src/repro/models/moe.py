@@ -30,6 +30,7 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import shard_map
 from repro.models.common import ParamDef, shard
 from repro.models.config import ModelConfig
+from repro.backends.runtime import site_scope
 from repro.models.mlp import mlp_defs, mlp_fwd
 
 __all__ = ["moe_defs", "moe_fwd"]
@@ -147,7 +148,11 @@ def moe_fwd(params: dict, x: jax.Array, cfg: ModelConfig,
 
     out = out_flat.reshape(b, s, d)
     if m.num_shared_experts:
-        out = out + mlp_fwd(params["shared"], x, cfg)
+        # site path matches the param tree ("…/moe/shared/w_up"); the routed
+        # experts' batched einsums are not dense sites and stay float under
+        # backend/plan scopes (see docs/PLANNER.md coverage notes)
+        with site_scope("shared"):
+            out = out + mlp_fwd(params["shared"], x, cfg)
     return shard(out, "batch", None, None), aux
 
 

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.backends.runtime import site_scope
 from repro.models.common import ParamDef, dense, shard
 from repro.models.config import ModelConfig
 
@@ -220,10 +221,11 @@ def rwkv_block_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
     xw = _token_shift(xn, tm["mu_w"], last)
     xg = _token_shift(xn, tm["mu_g"], last)
 
-    r = dense(tm["w_r"], xr, cfg)          # (B,S,H,K)
-    k = dense(tm["w_k"], xk, cfg)
-    v = dense(tm["w_v"], xv, cfg)
-    g = jax.nn.silu(dense(tm["w_g"], xg, cfg))
+    with site_scope("tm"):
+        r = dense(tm["w_r"], xr, cfg, name="w_r")      # (B,S,H,K)
+        k = dense(tm["w_k"], xk, cfg, name="w_k")
+        v = dense(tm["w_v"], xv, cfg, name="w_v")
+        g = jax.nn.silu(dense(tm["w_g"], xg, cfg, name="w_g"))
     r = shard(r, "batch", None, "heads", "head_dim")
     k = shard(k, "batch", None, "heads", "head_dim")
     v = shard(v, "batch", None, "heads", "head_dim")
@@ -252,10 +254,11 @@ def rwkv_block_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
     last2 = cache["cm_last"] if cache is not None else None
     xk2 = _token_shift(xn2, cm["mu_k"], last2)
     xr2 = _token_shift(xn2, cm["mu_r"], last2)
-    kk = jnp.square(jax.nn.relu(dense(cm["w_k"], xk2, cfg)))
-    kk = shard(kk, "batch", None, "mlp")
-    vv = dense(cm["w_v"], kk, cfg)
-    rr = jax.nn.sigmoid(dense(cm["w_r"], xr2, cfg))
+    with site_scope("cm"):
+        kk = jnp.square(jax.nn.relu(dense(cm["w_k"], xk2, cfg, name="w_k")))
+        kk = shard(kk, "batch", None, "mlp")
+        vv = dense(cm["w_v"], kk, cfg, name="w_v")
+        rr = jax.nn.sigmoid(dense(cm["w_r"], xr2, cfg, name="w_r"))
     x = x + shard(rr * vv, "batch", None, None)
 
     if cache is not None:

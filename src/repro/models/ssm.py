@@ -187,11 +187,11 @@ def ssm_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
     """x: (B, S, D) -> (out, new_cache_or_None)."""
     s, d_inner, n_heads = _dims(cfg)
     gn = s.n_groups * s.state_dim
-    z = shard(dense(params["w_z"], x, cfg), "batch", None, "mlp")
-    xin = shard(dense(params["w_x"], x, cfg), "batch", None, "mlp")
+    z = shard(dense(params["w_z"], x, cfg, name="w_z"), "batch", None, "mlp")
+    xin = shard(dense(params["w_x"], x, cfg, name="w_x"), "batch", None, "mlp")
     bc = jnp.concatenate(
-        [dense(params["w_b"], x, cfg), dense(params["w_c"], x, cfg)], axis=-1)
-    dt = shard(dense(params["w_dt"], x, cfg), "batch", None, "heads")
+        [dense(params["w_b"], x, cfg, name="w_b"), dense(params["w_c"], x, cfg, name="w_c")], axis=-1)
+    dt = shard(dense(params["w_dt"], x, cfg, name="w_dt"), "batch", None, "heads")
 
     tail_x = cache["conv_x"] if cache is not None else None
     tail_bc = cache["conv_bc"] if cache is not None else None
@@ -229,7 +229,7 @@ def ssm_fwd(params: dict, x: jax.Array, cfg: ModelConfig, *,
     y = yh.reshape(bsz, slen, d_inner).astype(x.dtype)
 
     y = rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.rms_eps)
-    out = dense(params["out_proj"], y, cfg)
+    out = dense(params["out_proj"], y, cfg, name="out_proj")
     out = shard(out, "batch", None, None)
     new_cache = None
     if cache is not None:

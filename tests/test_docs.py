@@ -45,4 +45,19 @@ def test_readme_links_docs_and_sweetspot():
     text = (ROOT / "README.md").read_text()
     assert "docs/ARCHITECTURE.md" in text
     assert "docs/PAPER_MAP.md" in text
+    assert "docs/PLANNER.md" in text
     assert "sweetspot" in text
+    assert "--backend-plan" in text
+    assert "serve plan" in text
+
+
+def test_planner_doc_exists_and_is_cross_linked():
+    """docs/PLANNER.md covers the plan contract and the stack links to it."""
+    text = (ROOT / "docs" / "PLANNER.md").read_text()
+    for needle in ("repro.backends.plan/v1", "specific wins",
+                   "Accuracy-guard semantics", "Eq. 1", "use_plan",
+                   "serve plan", "--backend-plan", "fnmatch"):
+        assert needle in text, f"PLANNER.md lost {needle!r}"
+    assert "PLANNER.md" in (ROOT / "docs" / "BACKENDS.md").read_text()
+    assert "PLANNER.md" in (ROOT / "docs" / "ARCHITECTURE.md").read_text()
+    assert "planner" in (ROOT / "docs" / "ARCHITECTURE.md").read_text()

@@ -1,0 +1,341 @@
+"""Per-layer mixed-precision planner: plan round-trip, site-pattern
+precedence, use_plan execution bit-exactness, and pricing properties."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends, configs
+from repro.backends.plan import SCHEMA, BackendPlan, SiteAssignment
+from repro.eval import planner
+from repro.models import common, model as model_lib
+
+
+@pytest.fixture(scope="module")
+def llama_smoke():
+    cfg = configs.get_smoke_config("llama3-8b")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def llama_plan(llama_smoke):
+    cfg, params = llama_smoke
+    return planner.build_plan(cfg, params, batch=2, unit_n=64, num_units=64)
+
+
+def _entry(pattern, design="tubgemm", bits=4, **kw):
+    return SiteAssignment(pattern=pattern, design=design, bits=bits, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Pattern matching / precedence
+# ---------------------------------------------------------------------------
+
+class TestPatternPrecedence:
+    def test_exact_beats_any_glob(self):
+        plan = BackendPlan(sites=(
+            _entry("layers/attn/*", "tubgemm", 4),
+            _entry("layers/attn/wq", "bgemm", 8),
+            _entry("*", "tugemm", 4),
+        ))
+        assert plan.assignment_for("layers/attn/wq").design == "bgemm"
+        assert plan.assignment_for("layers/attn/wv").design == "tubgemm"
+        assert plan.assignment_for("lm_head").design == "tugemm"
+
+    def test_most_literal_glob_wins(self):
+        plan = BackendPlan(sites=(
+            _entry("*", "tugemm", 4),
+            _entry("layers/mlp/*", "bgemm", 4),
+            _entry("layers/*", "tubgemm", 4),
+        ))
+        # "layers/mlp/*" (10 literals) beats "layers/*" (7) beats "*" (0)
+        assert plan.assignment_for("layers/mlp/w_up").design == "bgemm"
+        assert plan.assignment_for("layers/attn/wq").design == "tubgemm"
+
+    def test_tie_goes_to_earliest_entry(self):
+        plan = BackendPlan(sites=(
+            _entry("layers/*/wq", "bgemm", 4),
+            _entry("layers/a*wq", "tugemm", 4),  # same literal count (9)
+        ))
+        assert plan.assignment_for("layers/attn/wq").design == "bgemm"
+
+    def test_star_crosses_path_separators(self):
+        plan = BackendPlan(sites=(_entry("*w_up", "bgemm", 4),))
+        assert plan.assignment_for("layers/mlp/w_up") is not None
+        assert plan.assignment_for("layers/moe/shared/w_up") is not None
+
+    def test_no_match_means_float_path(self):
+        plan = BackendPlan(sites=(_entry("layers/*", "tubgemm", 4),))
+        assert plan.assignment_for("lm_head") is None
+        assert plan.backend_for("lm_head") is None
+
+    def test_backend_for_resolves_design_and_bits(self):
+        plan = BackendPlan(sites=(_entry("a", "bgemm", 8),))
+        b = plan.backend_for("a")
+        assert (b.name, b.bits) == ("bgemm", 8)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+class TestRoundTrip:
+    def test_json_round_trip_is_identity(self, llama_plan):
+        again = BackendPlan.from_json(llama_plan.to_json())
+        assert again == llama_plan
+
+    def test_save_load_round_trip(self, llama_plan, tmp_path):
+        path = llama_plan.save(tmp_path / "plan.json")
+        assert BackendPlan.load(path) == llama_plan
+
+    def test_schema_is_validated(self):
+        with pytest.raises(ValueError, match="schema"):
+            BackendPlan.from_json('{"schema": "bogus", "sites": []}')
+
+    def test_required_fields_are_validated(self):
+        doc = ('{"schema": "%s", "sites": [{"pattern": "x"}]}' % SCHEMA)
+        with pytest.raises(ValueError, match="missing"):
+            BackendPlan.from_json(doc)
+        doc = ('{"schema": "%s", "sites": [{"pattern": "x", "design": '
+               '"bgemm", "bits": 4, "bogus": 1}]}' % SCHEMA)
+        with pytest.raises(ValueError, match="unknown site fields"):
+            BackendPlan.from_json(doc)
+
+    def test_meta_survives(self, llama_plan):
+        meta = BackendPlan.from_json(llama_plan.to_json()).metadata()
+        assert meta["unit_n"] == 64
+        assert "totals" in meta
+
+
+# ---------------------------------------------------------------------------
+# Execution: use_plan vs use_backend
+# ---------------------------------------------------------------------------
+
+class TestPlanExecution:
+    def test_wildcard_plan_matches_use_backend_bit_exactly(self, llama_smoke):
+        """A '*' plan is semantically use_backend: bit-identical logits."""
+        cfg, params = llama_smoke
+        tokens = jnp.asarray(
+            np.random.default_rng(0).integers(0, cfg.vocab_size, (2, 8)),
+            jnp.int32)
+        plan = BackendPlan(sites=(_entry("*", "tubgemm", 4),))
+        with backends.use_plan(plan):
+            got, _ = model_lib.forward(params, cfg, tokens)
+        with backends.use_backend("tubgemm", bits=4):
+            ref, _ = model_lib.forward(params, cfg, tokens)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_per_site_dense_matches_assigned_use_backend(self):
+        """Mixed plan: each site's dense output equals use_backend of the
+        backend the plan assigns to that site (differing bit-widths)."""
+        rng = np.random.default_rng(1)
+        w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
+        plan = BackendPlan(sites=(
+            _entry("layers/attn/wq", "tubgemm", 8),
+            _entry("layers/*", "bgemm", 4),
+        ))
+        for leaf, assigned in (("wq", ("tubgemm", 8)), ("wv", ("bgemm", 4))):
+            with backends.use_plan(plan), \
+                    backends.site_scope("layers"), backends.site_scope("attn"):
+                got = common.dense(w, x, name=leaf)
+            with backends.use_backend(*assigned[:1], bits=assigned[1]):
+                ref = common.dense(w, x)
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    def test_mixed_plan_records_assigned_backend_per_site(self, llama_smoke):
+        cfg, params = llama_smoke
+        tokens = jnp.zeros((2, 8), jnp.int32)
+        plan = BackendPlan(sites=(
+            _entry("layers/attn/wv", "bgemm", 4),
+            _entry("*", "tubgemm", 4),
+        ))
+        with backends.use_plan(plan) as execution:
+            model_lib.forward(params, cfg, tokens)
+        by_site = {c.site: (c.backend, c.bits) for c in execution.calls}
+        assert by_site["layers/attn/wv"] == ("bgemm", 4)
+        assert by_site["layers/attn/wq"] == ("tubgemm", 4)
+        assert by_site["lm_head"] == ("tubgemm", 4)
+
+    def test_unmatched_sites_stay_float(self, llama_smoke):
+        cfg, params = llama_smoke
+        tokens = jnp.zeros((2, 8), jnp.int32)
+        plan = BackendPlan(sites=(_entry("layers/mlp/*", "tubgemm", 4),))
+        with backends.use_plan(plan) as execution:
+            model_lib.forward(params, cfg, tokens)
+        contracted = {c.site for c in execution.calls}
+        assert contracted == {"layers/mlp/w_up", "layers/mlp/w_gate",
+                              "layers/mlp/w_down"}
+
+    def test_unmatched_sites_run_float_even_with_quant_kernel_cfg(self):
+        """A live scope owns execution: plan-unmatched sites run FLOAT, never
+        the cfg.quant_kernel quantized path (the documented contract)."""
+        rng = np.random.default_rng(2)
+        w = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 32)), jnp.float32)
+        cfg = configs.get_smoke_config("llama3-8b").replace(
+            quant_bits=4, quant_kernel=True)
+        plan = BackendPlan(sites=(_entry("matches/nothing", "tubgemm", 4),))
+        with backends.use_plan(plan):
+            got = common.dense(w, x, cfg, name="unplanned")
+        np.testing.assert_array_equal(
+            np.asarray(got), np.asarray(jnp.matmul(x, w)))
+        # outside any scope the same cfg takes the quantized kernel path
+        assert not np.array_equal(np.asarray(common.dense(w, x, cfg)),
+                                  np.asarray(jnp.matmul(x, w)))
+
+    def test_saved_plan_replays_bit_exactly(self, llama_smoke, llama_plan,
+                                            tmp_path):
+        """plan -> JSON -> load -> use_plan executes bit-exactly vs the
+        in-memory plan object."""
+        cfg, params = llama_smoke
+        tokens = jnp.zeros((2, 8), jnp.int32)
+        loaded = BackendPlan.load(llama_plan.save(tmp_path / "p.json"))
+        with backends.use_plan(llama_plan):
+            ref, _ = model_lib.forward(params, cfg, tokens)
+        with backends.use_plan(loaded):
+            got, _ = model_lib.forward(params, cfg, tokens)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# Site discovery
+# ---------------------------------------------------------------------------
+
+class TestDiscovery:
+    def test_sites_match_param_tree_paths(self, llama_smoke):
+        cfg, params = llama_smoke
+        sites = planner.discover_sites(cfg, params, batch=2)
+        names = {s.name for s in sites}
+        assert names == {"layers/attn/wq", "layers/attn/wk",
+                         "layers/attn/wv", "layers/attn/wo",
+                         "layers/mlp/w_up", "layers/mlp/w_gate",
+                         "layers/mlp/w_down", "lm_head"}
+
+    def test_counts_and_shapes(self, llama_smoke):
+        cfg, params = llama_smoke
+        by = {s.name: s for s in planner.discover_sites(cfg, params, batch=2)}
+        wq = by["layers/attn/wq"]
+        assert (wq.k, wq.n_out, wq.count) == (
+            cfg.d_model, cfg.num_heads * cfg.resolved_head_dim,
+            cfg.num_layers)
+        assert wq.weight.shape == (wq.count * wq.k, wq.n_out)
+        assert by["lm_head"].count == 1
+
+    def test_rwkv_and_hybrid_families_discover(self):
+        for arch, needle in (("rwkv6-3b", "layers/tm/w_r"),
+                             ("zamba2-1.2b", "shared/attn/wq")):
+            cfg = configs.get_smoke_config(arch)
+            params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+            names = {s.name for s in
+                     planner.discover_sites(cfg, params, batch=2)}
+            assert needle in names
+
+
+# ---------------------------------------------------------------------------
+# Pricing properties
+# ---------------------------------------------------------------------------
+
+class TestPricingProperties:
+    def test_sparsity_never_raises_unary_dynamic_energy(self):
+        """Planner monotonicity: higher measured bit sparsity never increases
+        a temporal (sparsity-aware) design's priced dynamic energy."""
+        grid = [i / 10 for i in range(10)]
+        for design in ("tugemm", "tubgemm"):
+            for bits in (2, 4, 8):
+                costs = [planner.price_site(
+                    design, bits, m=4, k=96, n_out=192, count=3,
+                    bit_sparsity=s, unit_n=64,
+                    num_units=8)["dyn_energy_uj"] for s in grid]
+                assert all(a >= b - 1e-12 for a, b in zip(costs, costs[1:])), \
+                    f"{design}@{bits}: dyn energy not monotone in sparsity"
+
+    def test_sparsity_is_ignored_by_binary(self):
+        lo = planner.price_site("bgemm", 4, m=4, k=96, n_out=192, count=3,
+                                bit_sparsity=0.0, unit_n=64, num_units=8)
+        hi = planner.price_site("bgemm", 4, m=4, k=96, n_out=192, count=3,
+                                bit_sparsity=0.9, unit_n=64, num_units=8)
+        assert lo == hi
+
+    def test_quantization_mse_shrinks_with_bits(self):
+        w = np.random.default_rng(3).normal(size=(64, 48)).astype(np.float32)
+        mses = [planner.quantization_rel_mse(w, b) for b in (2, 4, 8)]
+        assert mses[0] > mses[1] > mses[2]
+        assert mses[2] < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# build_plan acceptance properties
+# ---------------------------------------------------------------------------
+
+class TestBuildPlan:
+    def test_planned_total_beats_every_uniform_baseline(self, llama_plan):
+        totals = llama_plan.metadata()["totals"]
+        planned = totals["planned"]["dyn_energy_uj"]
+        assert totals["uniform"], "no guard-feasible uniform baseline"
+        for name, tot in totals["uniform"].items():
+            assert planned <= tot["dyn_energy_uj"] * (1 + 1e-9), \
+                f"planned total lost to uniform {name}"
+
+    def test_shipped_config_plan_is_mixed(self, llama_plan):
+        """The paper's headline as an artifact: >= 2 distinct backends,
+        tubGEMM on high-sparsity sites, binary keeping the least sparse."""
+        distinct = llama_plan.distinct_backends()
+        assert len(distinct) >= 2
+        designs_used = {d for d, _ in distinct}
+        assert "tubgemm" in designs_used and "bgemm" in designs_used
+        by = {e.pattern: e for e in llama_plan.sites}
+        tub_spa = [e.bit_blockmax for e in by.values() if e.design == "tubgemm"]
+        b_spa = [e.bit_blockmax for e in by.values() if e.design == "bgemm"]
+        assert min(tub_spa) > max(b_spa), \
+            "sparsity did not drive the design split"
+
+    def test_guard_blocks_two_bit_everywhere(self, llama_plan):
+        assert all(e.bits >= 4 for e in llama_plan.sites)
+        assert not any(e.guard_relaxed for e in llama_plan.sites)
+        feasible = set(llama_plan.metadata()["totals"]["uniform"])
+        assert not any(name.endswith("@2") for name in feasible)
+
+    def test_impossible_guard_relaxes_to_most_accurate(self, llama_smoke):
+        cfg, params = llama_smoke
+        plan = planner.build_plan(cfg, params, batch=2, unit_n=64,
+                                  num_units=64, max_rel_mse=0.0)
+        assert all(e.guard_relaxed for e in plan.sites)
+        assert all(e.bits == 8 for e in plan.sites)  # most accurate width
+        assert plan.metadata()["totals"]["uniform_best"] is None
+
+    def test_measured_cycles_within_bounds(self, llama_smoke, llama_plan):
+        cfg, params = llama_smoke
+        sites = {s.name: s for s in
+                 planner.discover_sites(cfg, params, batch=2)}
+        for e in llama_plan.sites:
+            cyc = planner.measure_site_cycles(sites[e.pattern], e,
+                                              unit_n=64, num_units=64)
+            assert cyc["dyn_floor"] - 0.5 <= cyc["measured"] <= cyc["wc"] + 0.5
+
+    def test_hybrid_shared_sites_measure_and_plan(self):
+        """Zamba2's shared block: one physical weight applied n_groups times
+        per step — counts scale, cycle measurement stays within bounds."""
+        from repro.models import blocks as blocks_lib
+        cfg = configs.get_smoke_config("zamba2-1.2b")
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+        plan = planner.build_plan(cfg, params, batch=2, unit_n=64,
+                                  num_units=64, designs=("tubgemm",),
+                                  bits_candidates=(4,))
+        n_groups = blocks_lib.hybrid_counts(cfg)[0]
+        sites = {s.name: s for s in
+                 planner.discover_sites(cfg, params, batch=2)}
+        shared = [e for e in plan.sites if e.pattern.startswith("shared/")]
+        assert shared, "hybrid plan lost its shared-block sites"
+        for e in shared:
+            assert e.count == n_groups
+            cyc = planner.measure_site_cycles(sites[e.pattern], e,
+                                              unit_n=64, num_units=64)
+            assert cyc["dyn_floor"] - 0.5 <= cyc["measured"] <= cyc["wc"] + 0.5
+
+    def test_plan_entries_are_exact_site_names(self, llama_smoke, llama_plan):
+        cfg, params = llama_smoke
+        names = {s.name for s in planner.discover_sites(cfg, params, batch=2)}
+        assert {e.pattern for e in llama_plan.sites} == names
