@@ -1,0 +1,161 @@
+"""Sharded PE-array grid benchmark: grid shapes × designs × bits cost sweep
+plus a per-shard heterogeneous grid plan, emitted as ``reports/grid.json`` +
+``reports/grid.md``.
+
+Two parts:
+
+1. **Grid cost sweep** — the llama3-8b smoke decode workload priced on every
+   (grid shape × design × bit-width) via ``core.accounting.price_workload``'s
+   grid branch (``ppa.GridDLAModel``): dynamic energy/latency, per-unit
+   utilization and the interconnect-hop share.
+2. **Per-shard grid plan** — ``repro.eval.planner.build_grid_plan`` at the
+   paper-grid 64×64 DLA geometry: each shard of a 2×2 grid plans its own
+   weight slices (per-shard sparsity profiles), and the verdict compares the
+   heterogeneous planned energy against the best *uniform* grid assignment.
+
+Derived error (the ``benchmarks.run`` quality column) is 0.0 when the
+acceptance properties hold, +1.0 per violation:
+
+* grid energy is monotone non-decreasing along the refinement chain
+  (1,1) → (1,2) → (2,2) → (2,4) → (4,4) for every design × bits (the
+  workload's dims divide every chain grid, so this is exact, not a fit);
+* the per-shard plan is *mixed* (≥ 2 distinct (design, bits) across the
+  shard assignments);
+* the per-shard heterogeneous planned energy ≤ the best uniform grid
+  assignment's energy (per-site, per-shard argmin over a superset).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARCH = "llama3-8b"
+UNIT_N = 64
+NUM_UNITS = 64
+BATCH = 4
+#: refinement chain: each grid divides the next, so energy must be monotone
+GRID_CHAIN = [(1, 1), (1, 2), (2, 2), (2, 4), (4, 4)]
+PLAN_GRID = (2, 2)
+
+
+def grid(out_dir: str | None = None):
+    """Returns (rows, err) per the benchmarks.run contract; writes the files."""
+    import jax
+
+    from repro import configs
+    from repro.core import accounting
+    from repro.eval import planner as planner_lib
+    from repro.eval import sweetspot as sweetspot_lib
+    from repro.launch import serve as serve_lib
+    from repro.models import model as model_lib
+
+    out_dir = out_dir or os.environ.get("GRID_OUT", "reports")
+    cfg = configs.get_smoke_config(ARCH)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+
+    rows = []
+    err = 0.0
+
+    # --- part 1: grid cost sweep -------------------------------------------
+    sweep = []
+    for bits in (2, 4, 8):
+        rec, _ = serve_lib.build_workload(cfg, params, BATCH, 16, bits)
+        for design in sweetspot_lib.CALIBRATED_DESIGNS:
+            chain_energy = []
+            for shape in GRID_CHAIN:
+                cost = accounting.price_workload(
+                    rec.calls, design=design, bits=bits, unit_n=UNIT_N,
+                    num_units=NUM_UNITS, grid=shape)
+                chain_energy.append(cost.dyn_energy_uj)
+                sweep.append({
+                    "design": design, "bits": bits,
+                    "grid": list(shape),
+                    "dyn_energy_uj": cost.dyn_energy_uj,
+                    "dyn_latency_us": cost.dyn_latency_us,
+                    "hop_energy_uj": cost.hop_energy_uj,
+                    "hop_energy_share": cost.hop_energy_share,
+                    "utilization": cost.utilization,
+                })
+                rows.append((
+                    f"{design}@{bits}b_grid{shape[0]}x{shape[1]}",
+                    f"dynE={cost.dyn_energy_uj:.4f}uJ "
+                    f"dynL={cost.dyn_latency_us:.4f}us "
+                    f"hop={cost.hop_energy_share:.1%} "
+                    f"util={cost.utilization:.3f}", None))
+            monotone = all(b >= a * (1 - 1e-9) for a, b in
+                           zip(chain_energy, chain_energy[1:]))
+            if not monotone:
+                err += 1.0
+                rows.append((f"NONMONOTONE_{design}@{bits}",
+                             str(chain_energy), None))
+
+    # --- part 2: per-shard heterogeneous grid plan -------------------------
+    gplan = planner_lib.build_grid_plan(
+        cfg, params, grid=PLAN_GRID, batch=BATCH, unit_n=UNIT_N,
+        num_units=NUM_UNITS)
+    meta = gplan.metadata()
+    agg = meta["totals"]["aggregate"]
+    hetero = agg["planned_heterogeneous"]["dyn_energy_uj"]
+    best_name = agg["uniform_best"]
+    best = (agg["uniform"][best_name]["dyn_energy_uj"]
+            if best_name else 0.0)
+    shard_distinct = gplan.shard_distinct_backends()
+    rows += [
+        ("plan_grid", f"{PLAN_GRID[0]}x{PLAN_GRID[1]}", None),
+        ("plan_heterogeneous_dyn_energy_uj", f"{hetero:.4f}", None),
+        ("plan_executed_dyn_energy_uj",
+         f"{agg['planned']['dyn_energy_uj']:.4f}", None),
+        ("plan_best_uniform", f"{best_name} {best:.4f}uJ", None),
+        ("plan_shard_distinct",
+         ", ".join(f"{d}@{b}" for d, b in shard_distinct), None),
+        ("plan_heterogeneous_sites",
+         ", ".join(meta["heterogeneous_sites"]) or "none", None),
+    ]
+    if len(shard_distinct) < 2:
+        err += 1.0  # the per-shard assignment degenerated to uniform
+    if best_name is None or hetero > best * (1 + 1e-9):
+        err += 1.0  # the per-shard plan lost to a uniform grid assignment
+
+    # --- report files -------------------------------------------------------
+    os.makedirs(out_dir, exist_ok=True)
+    json_path = os.path.join(out_dir, "grid.json")
+    with open(json_path, "w") as fh:
+        json.dump({
+            "schema": "repro.benchmarks.grid/v1",
+            "arch": ARCH, "unit_n": UNIT_N, "num_units": NUM_UNITS,
+            "batch": BATCH,
+            "sweep": sweep,
+            "plan": json.loads(gplan.to_json()),
+        }, fh, indent=2)
+        fh.write("\n")
+    md_path = os.path.join(out_dir, "grid.md")
+    with open(md_path, "w") as fh:
+        fh.write(_sweep_markdown(sweep))
+        fh.write("\n")
+        fh.write(planner_lib.grid_plan_to_markdown(gplan))
+    rows += [("json", json_path, None), ("markdown", md_path, None)]
+    return rows, err
+
+
+def _sweep_markdown(sweep: list[dict]) -> str:
+    lines = [
+        "# Grid cost sweep",
+        "",
+        f"llama3-8b smoke decode workload on {NUM_UNITS}× {UNIT_N}×{UNIT_N} "
+        "DLA nodes composed into PE-array grids "
+        "(`core.accounting.price_workload` grid branch; hop model "
+        "`core.ppa.HOP_CYCLES` / `HOP_ENERGY_PJ_PER_BYTE`).",
+        "",
+        "| design | bits | grid | dyn energy (µJ) | dyn latency (µs) | "
+        "hop share | utilization |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for row in sweep:
+        lines.append(
+            f"| {row['design']} | {row['bits']} | "
+            f"{row['grid'][0]}×{row['grid'][1]} | "
+            f"{row['dyn_energy_uj']:.4f} | {row['dyn_latency_us']:.4f} | "
+            f"{row['hop_energy_share']:.1%} | {row['utilization']:.3f} |")
+    lines.append("")
+    return "\n".join(lines)

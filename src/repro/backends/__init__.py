@@ -21,24 +21,36 @@ matching rules and how ``repro.eval.planner`` derives plans.
 """
 
 from repro.backends.base import GemmBackend
+from repro.backends.grid import (GridBackend, GridPlan, as_grid,
+                                 grid_matrix_cycles, load_plan, parse_grid,
+                                 shard_site, shard_slices)
 from repro.backends.plan import BackendPlan, SiteAssignment
 from repro.backends.registry import (KERNEL_SIBLINGS, PALLAS_SUFFIX,
                                      available, mirror_design_spec, resolve)
 from repro.backends.runtime import (BackendExecution, ExecutedGemm,
                                     PlanExecution, SiteRecorder,
                                     active_backend, active_execution,
-                                    current_site, record_sites, site_scope,
-                                    use_backend, use_plan)
+                                    current_site, measure_matrix_cycles,
+                                    record_sites, site_scope, use_backend,
+                                    use_plan)
 
 __all__ = [
     "GemmBackend",
+    "GridBackend",
+    "GridPlan",
     "BackendPlan",
     "SiteAssignment",
     "KERNEL_SIBLINGS",
     "PALLAS_SUFFIX",
+    "as_grid",
     "available",
+    "grid_matrix_cycles",
+    "load_plan",
     "mirror_design_spec",
+    "parse_grid",
     "resolve",
+    "shard_site",
+    "shard_slices",
     "BackendExecution",
     "PlanExecution",
     "SiteRecorder",
@@ -46,6 +58,7 @@ __all__ = [
     "active_backend",
     "active_execution",
     "current_site",
+    "measure_matrix_cycles",
     "record_sites",
     "site_scope",
     "use_backend",

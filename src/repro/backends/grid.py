@@ -1,0 +1,471 @@
+"""Sharded PE-array grids as first-class backends.
+
+The paper prices *single* GEMM units; an edge/cloud DLA deploys a **grid** of
+them fed by a partitioned model.  This module composes any resolved
+:class:`~repro.backends.base.GemmBackend` into a ``units_x`` × ``units_y``
+tensor-parallel grid that is simultaneously
+
+* **executable** — :meth:`GridBackend.execute` runs the contraction under
+  ``repro.compat.shard_map`` on a real ``launch/mesh`` device mesh: the
+  contraction dim K is split over the ``gx`` axis (per-chip partial sums
+  reduced with ``lax.psum``), the output columns over ``gy``.  Partial sums
+  are exact (int32 for the exact designs; uGEMM's float counts are exact
+  integers below the validated ``L·K < 2^24`` envelope), so a grid of exact
+  units is **bit-identical** to the single-unit backend;
+* **priceable** — :meth:`GridBackend.cycles` / :meth:`~GridBackend.dyn_cycles`
+  account per-shard tile counts plus the interconnect-hop term, and
+  :meth:`~repro.backends.base.GemmBackend.price` routes through
+  ``core.accounting.price_workload``'s grid branch
+  (``ppa.GridDLAModel``), returning a ``GridCost`` with per-unit utilization
+  and link energy;
+* **plannable** — :class:`GridPlan` holds one
+  :class:`~repro.backends.plan.BackendPlan` per shard (each shard's weight
+  slice has its own sparsity profile, so assignments may differ across
+  shards) plus the *aggregate* plan execution replays.
+
+**Shard-local site names.**  A grid plan addresses a single shard's
+assignment with the shard-qualified name ``"{gx},{gy}/{site}"`` (see
+:func:`shard_site`); :meth:`GridPlan.backend_for` resolves those to the
+shard's own (unwrapped) backend, while plain site names resolve to the
+aggregate entry wrapped in a :class:`GridBackend`.  SPMD execution traces
+``models/common.dense`` once for all shards, so the executed lookup resolves
+identically on every shard by construction — per-shard heterogeneity lives
+in the pricing verdict, not the traced program (all candidate designs are
+exact, so the aggregate execution's bit-exactness evidence transfers).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import json
+import os
+import re
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.backends.base import GemmBackend
+from repro.backends.plan import SCHEMA as PLAN_SCHEMA
+from repro.backends.plan import BackendPlan
+from repro.core import ppa
+
+__all__ = ["GRID_SCHEMA", "GridBackend", "GridPlan", "as_grid", "parse_grid",
+           "grid_mesh", "shard_site", "shard_slices", "grid_matrix_cycles",
+           "load_plan"]
+
+GRID_SCHEMA = "repro.backends.gridplan/v1"
+
+#: the "{gx},{gy}" prefix of a shard-local site name (see :func:`shard_site`)
+_SHARD_KEY_RE = re.compile(r"\d+,\d+")
+
+
+def parse_grid(grid) -> tuple[int, int]:
+    """Normalize a grid spec to ``(units_x, units_y)``.
+
+    Accepts a 2-tuple/list, or a string ``"2,2"`` / ``"2x2"`` (the
+    ``serve --grid`` CLI syntax).  Both entries must be >= 1.
+    """
+    if isinstance(grid, str):
+        sep = "," if "," in grid else "x"
+        parts = grid.split(sep)
+        if len(parts) != 2:
+            raise ValueError(f"grid spec {grid!r} is not 'X,Y' or 'XxY'")
+        grid = (int(parts[0]), int(parts[1]))
+    units_x, units_y = int(grid[0]), int(grid[1])
+    if units_x < 1 or units_y < 1:
+        raise ValueError(f"grid must be >= 1x1, got {units_x}x{units_y}")
+    return (units_x, units_y)
+
+
+@functools.lru_cache(maxsize=None)
+def grid_mesh(units_x: int, units_y: int):
+    """The (cached) ``("gx", "gy")`` device mesh grid execution runs on.
+
+    Lazy — pricing and planning never touch devices; only
+    :meth:`GridBackend.execute` builds the mesh, and a grid larger than the
+    visible device count fails there with ``launch.mesh``'s error.
+    """
+    from repro.launch import mesh as mesh_lib  # deferred: devices only on use
+    return mesh_lib.make_grid_mesh(units_x, units_y)
+
+
+def shard_site(coord: tuple[int, int], site: str) -> str:
+    """The shard-local name of ``site`` on shard ``(gx, gy)``:
+    ``"{gx},{gy}/{site}"`` (the key :class:`GridPlan` stores shards under)."""
+    return f"{coord[0]},{coord[1]}/{site}"
+
+
+def shard_slices(k: int, n_out: int, units_x: int,
+                 units_y: int) -> dict[tuple[int, int], tuple[slice, slice]]:
+    """Per-shard ``(k-rows, n-cols)`` slices of a (k, n_out) weight.
+
+    The ceil-split :meth:`GridBackend.execute` applies: shard ``(gx, gy)``
+    owns rows ``[gx·⌈k/X⌉, (gx+1)·⌈k/X⌉) ∩ [0, k)`` and the matching column
+    band.  Shards that are pure padding (possible when X ∤ k) map to empty
+    slices.
+    """
+    ks, ns = -(-k // units_x), -(-n_out // units_y)
+    return {
+        (gx, gy): (slice(gx * ks, min((gx + 1) * ks, k)),
+                   slice(gy * ns, min((gy + 1) * ns, n_out)))
+        for gx in range(units_x) for gy in range(units_y)}
+
+
+@dataclasses.dataclass(frozen=True)
+class GridBackend(GemmBackend):
+    """A ``units_x`` × ``units_y`` tensor-parallel grid of one unit design.
+
+    Subclasses :class:`GemmBackend`, so everything that accepts a backend
+    (``use_backend``, ``price_workload``, ``models/common.dense``) accepts a
+    grid.  ``name``/``bits``/``exact``/``pricing_design`` are the wrapped
+    unit's; the grid adds the shard topology (``units_x`` K-partitions whose
+    partial sums psum-reduce, ``units_y`` output-column partitions) and the
+    interconnect-hop cost terms (``core.ppa.HOP_CYCLES``).  Build with
+    :func:`as_grid`.
+    """
+
+    units_x: int = 1
+    units_y: int = 1
+
+    def __post_init__(self) -> None:
+        super().__post_init__()
+        if self.units_x < 1 or self.units_y < 1:
+            raise ValueError(f"grid must be >= 1x1, got "
+                             f"{self.units_x}x{self.units_y}")
+
+    # -- topology -----------------------------------------------------------
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        """The (units_x, units_y) shape (``price_workload``'s grid switch)."""
+        return (self.units_x, self.units_y)
+
+    @property
+    def num_shards(self) -> int:
+        return self.units_x * self.units_y
+
+    def inner(self) -> GemmBackend:
+        """The wrapped single-unit backend (one grid node)."""
+        return GemmBackend(
+            name=self.name, bits=self.bits, exact=self.exact,
+            has_synthesis_data=self.has_synthesis_data,
+            pricing_design=self.pricing_design, spec=self.spec,
+            block=self.block, interpret=self.interpret)
+
+    def shard_common_dim(self, common_dim: int) -> int:
+        """Per-shard contraction length: ``⌈common_dim / units_x⌉``."""
+        return -(-int(common_dim) // self.units_x)
+
+    def hop_cycles(self) -> int:
+        """Interconnect critical path per GEMM, in cycles: one hop per
+        activation fan-out step (``units_y - 1``) plus one per partial-sum
+        reduction step (``units_x - 1``)."""
+        return ppa.HOP_CYCLES * ((self.units_x - 1) + (self.units_y - 1))
+
+    def shard_operands(self, q: jax.Array) -> Iterator[
+            tuple[tuple[int, int], jax.Array]]:
+        """Yield ``((gx, gy), slice)`` of a (K,) / (K, n) temporal-operand
+        tile — the codes each grid node actually streams (real rows only;
+        pure-padding shards are skipped)."""
+        q = jnp.asarray(q)
+        if q.ndim == 1:
+            q = q[:, None]
+        for coord, (rows, cols) in shard_slices(
+                q.shape[0], q.shape[1], self.units_x, self.units_y).items():
+            sub = q[rows, cols]
+            if sub.size:
+                yield coord, sub
+
+    # -- execution ----------------------------------------------------------
+
+    def execute(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Sharded GEMM on quantized codes, bit-identical to the wrapped
+        backend.
+
+        Shapes as :meth:`GemmBackend.execute`.  2-D operands are zero-padded
+        to the grid (zero codes contribute exact zeros on every design), K
+        is split over ``gx`` and N over ``gy`` under ``compat.shard_map`` on
+        the :func:`grid_mesh` devices, and the per-chip partial sums reduce
+        with ``lax.psum`` — int32 (exact designs) or exact-integer float32
+        (uGEMM), so the reduction order cannot change the result.  Batched
+        operands recurse on the 2-D path.
+        """
+        if a.ndim == 3:
+            if b.ndim == 3:
+                return jnp.stack([self.execute(a[i], b[i])
+                                  for i in range(a.shape[0])])
+            m = a.shape[1]
+            out = self.execute(a.reshape(-1, a.shape[-1]), b)
+            return out.reshape(a.shape[0], m, out.shape[-1])
+        if a.ndim != 2:
+            raise ValueError(
+                f"execute wants (M, K) or (B, M, K) operands, got {a.shape}")
+        x_parts, y_parts = self.units_x, self.units_y
+        k, n = a.shape[1], b.shape[1]
+        kp = -(-k // x_parts) * x_parts
+        n_pad = -(-n // y_parts) * y_parts
+        ap = jnp.pad(a, ((0, 0), (0, kp - k)))
+        bp = jnp.pad(b, ((0, kp - k), (0, n_pad - n)))
+        exact_fn, bits, reduce_k = self.spec.exact_fn, self.bits, x_parts > 1
+
+        def node(a_sub, b_sub):
+            part = exact_fn(a_sub, b_sub, bits)
+            return jax.lax.psum(part, "gx") if reduce_k else part
+
+        fn = compat.shard_map(node, mesh=grid_mesh(x_parts, y_parts),
+                              in_specs=(P(None, "gx"), P("gx", "gy")),
+                              out_specs=P(None, "gy"), check_vma=False)
+        return fn(ap, bp)[:, :n]
+
+    def stream(self, a: jax.Array, b: jax.Array):
+        """Grids have no single cycle-faithful stream — the schedule is
+        per-shard.  Stream one node via ``.inner().stream(...)`` and account
+        the grid with :meth:`cycles` / :meth:`dyn_cycles`."""
+        raise NotImplementedError(
+            "GridBackend.stream: stream the wrapped unit per shard "
+            "(backend.inner().stream on a shard_operands slice); grid cycle "
+            "accounting goes through cycles()/dyn_cycles()")
+
+    # -- cost ---------------------------------------------------------------
+
+    def cycles(self, common_dim: int) -> int:
+        """Worst-case grid cycles: the per-shard worst case over the
+        ceil-split contraction length, plus the interconnect hops."""
+        return self.spec.wc_cycles_fn(
+            self.bits, self.shard_common_dim(common_dim)) + self.hop_cycles()
+
+    def dyn_cycles(self, common_dim: int | None = None, *,
+                   bit_sparsity: float | None = None,
+                   operand=None) -> float:
+        """Dynamic grid cycles (same three modes as the base method).
+
+        ``operand`` — per-shard early termination on each node's own slice
+        of the codes; the grid finishes with its slowest shard (max), plus
+        hops.  ``bit_sparsity`` — Eq. 1 applied to the per-shard worst case
+        (the statistic is assumed shard-uniform; per-shard statistics go
+        through :func:`grid_matrix_cycles`).  Neither — worst case.
+        """
+        hops = float(self.hop_cycles())
+        if operand is not None:
+            if bit_sparsity is not None:
+                raise ValueError("pass either operand or bit_sparsity, not both")
+            node = self.inner()
+            slowest = max(
+                (float(node.dyn_cycles(operand=sub))
+                 for _, sub in self.shard_operands(operand)), default=0.0)
+            return slowest + hops
+        if common_dim is None:
+            raise ValueError("common_dim is required without an operand")
+        ks = self.shard_common_dim(common_dim)
+        wc = self.spec.wc_cycles_fn(self.bits, ks)
+        if bit_sparsity is not None and self.spec.sparsity_aware:
+            return wc * (1.0 - float(bit_sparsity)) + hops
+        return float(wc) + hops
+
+
+def as_grid(backend: GemmBackend, units_x: int, units_y: int) -> GridBackend:
+    """Wrap a resolved backend in a ``units_x`` × ``units_y`` grid.
+
+    Idempotent re-gridding: an existing :class:`GridBackend` is re-shaped,
+    not nested.  A ``(1, 1)`` grid is a valid degenerate topology (one node,
+    zero hops) whose execute path still runs the shard_map machinery.
+    """
+    units_x, units_y = parse_grid((units_x, units_y))
+    return GridBackend(
+        name=backend.name, bits=backend.bits, exact=backend.exact,
+        has_synthesis_data=backend.has_synthesis_data,
+        pricing_design=backend.pricing_design, spec=backend.spec,
+        block=backend.block, interpret=backend.interpret,
+        units_x=units_x, units_y=units_y)
+
+
+def grid_matrix_cycles(backend: GridBackend, weight, *, rows: int,
+                       unit_n: int, num_units: int) -> dict[str, dict]:
+    """Per-shard measured/dyn/floor/wc cycles for ONE (k, n_out) weight.
+
+    Each shard's slice is profiled and measured on its *own* codes (this is
+    where per-shard sparsity heterogeneity becomes visible), with waves from
+    the shard-local tile count and the grid's hop term added to every bound
+    identically — so the single-unit invariant ``dyn_floor ≤ measured ≤ wc``
+    holds per shard.  Keys are ``"{gx},{gy}"``; pure-padding shards are
+    omitted.
+    """
+    import numpy as np
+
+    from repro.backends import runtime
+
+    node = backend.inner()
+    hops = float(backend.hop_cycles())
+    w = np.asarray(weight, np.float32)
+    out: dict[str, dict] = {}
+    for coord, (r, c) in shard_slices(w.shape[0], w.shape[1],
+                                      backend.units_x,
+                                      backend.units_y).items():
+        sub = w[r, c]
+        if not sub.size:
+            continue
+        cyc = runtime.measure_matrix_cycles(node, sub, rows=rows,
+                                            unit_n=unit_n,
+                                            num_units=num_units)
+        out[f"{coord[0]},{coord[1]}"] = {k: v + hops for k, v in cyc.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# GridPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GridPlan:
+    """Per-shard mixed-precision plans for a PE-array grid.
+
+    ``shards`` maps ``"{gx},{gy}"`` keys to each shard's own
+    :class:`BackendPlan` (derived from that shard's weight slices);
+    ``aggregate`` is the plan SPMD execution replays (one entry per site,
+    argmin of the summed per-shard candidate cost).  ``meta`` carries the
+    per-shard and aggregate planned-vs-uniform verdicts.  Serializes to
+    ``schema: repro.backends.gridplan/v1`` (one nested plan/v1 document per
+    shard plus the aggregate).
+    """
+
+    units_x: int
+    units_y: int
+    aggregate: BackendPlan
+    shards: tuple[tuple[str, BackendPlan], ...]
+    meta: tuple[tuple[str, object], ...] = ()
+
+    def __post_init__(self) -> None:
+        if not isinstance(self.shards, tuple):
+            object.__setattr__(self, "shards", tuple(self.shards))
+        if not isinstance(self.meta, tuple):
+            object.__setattr__(self, "meta",
+                               tuple(sorted(dict(self.meta).items())))
+
+    @property
+    def grid(self) -> tuple[int, int]:
+        return (self.units_x, self.units_y)
+
+    def shard_plan(self, gx: int, gy: int) -> BackendPlan | None:
+        """Shard ``(gx, gy)``'s own plan (None when absent)."""
+        key = f"{gx},{gy}"
+        for name, plan in self.shards:
+            if name == key:
+                return plan
+        return None
+
+    def backend_for(self, site: str) -> GemmBackend | None:
+        """Resolve a site name to its executing backend.
+
+        Plain names resolve against the aggregate plan and come back wrapped
+        in a :class:`GridBackend` (this is what ``use_plan`` executes).  A
+        shard-local name (``"{gx},{gy}/{site}"``, see :func:`shard_site`)
+        resolves *only* against that shard's own plan and returns the
+        unwrapped single-node backend — the engine that one chip runs; a
+        missing shard or unmatched shard site is None, never an aggregate
+        fallback (site names contain no commas, so the prefix is
+        unambiguous).
+        """
+        head, sep, rest = site.partition("/")
+        if sep and _SHARD_KEY_RE.fullmatch(head):
+            gx, gy = (int(p) for p in head.split(","))
+            plan = self.shard_plan(gx, gy)
+            return None if plan is None else plan.backend_for(rest)
+        backend = self.aggregate.backend_for(site)
+        if backend is None:
+            return None
+        return as_grid(backend, self.units_x, self.units_y)
+
+    def distinct_backends(self) -> tuple[tuple[str, int], ...]:
+        """Sorted unique (design, bits) of the *aggregate* (executed) plan."""
+        return self.aggregate.distinct_backends()
+
+    def shard_distinct_backends(self) -> tuple[tuple[str, int], ...]:
+        """Sorted unique (design, bits) across every shard's own plan."""
+        pairs = {(s.design, s.bits)
+                 for _, plan in self.shards for s in plan.sites}
+        return tuple(sorted(pairs))
+
+    def heterogeneous_sites(self) -> tuple[str, ...]:
+        """Site names whose assignment differs across shards — the sites
+        where per-shard sparsity actually flips the sweet spot."""
+        out = []
+        for entry in self.aggregate.sites:
+            picks = {(p.assignment_for(entry.pattern).design,
+                      p.assignment_for(entry.pattern).bits)
+                     for _, p in self.shards
+                     if p.assignment_for(entry.pattern) is not None}
+            if len(picks) > 1:
+                out.append(entry.pattern)
+        return tuple(out)
+
+    def metadata(self) -> dict:
+        return dict(self.meta)
+
+    # -- (de)serialization --------------------------------------------------
+
+    def to_json(self, indent: int = 2) -> str:
+        """Stable JSON rendering (``schema: repro.backends.gridplan/v1``)."""
+        doc = {
+            "schema": GRID_SCHEMA,
+            "grid": [self.units_x, self.units_y],
+            "meta": dict(self.meta),
+            "aggregate": json.loads(self.aggregate.to_json()),
+            "shards": {key: json.loads(plan.to_json())
+                       for key, plan in self.shards},
+        }
+        return json.dumps(doc, indent=indent)
+
+    @classmethod
+    def from_json(cls, text: str) -> "GridPlan":
+        """Parse :meth:`to_json` output; validates both schema layers."""
+        doc = json.loads(text)
+        if doc.get("schema") != GRID_SCHEMA:
+            raise ValueError(
+                f"not a grid plan: schema {doc.get('schema')!r} "
+                f"(expected {GRID_SCHEMA!r})")
+        grid = doc.get("grid")
+        if (not isinstance(grid, (list, tuple)) or len(grid) != 2):
+            raise ValueError(f"grid plan needs a 2-element grid, got {grid!r}")
+        sub = lambda d: BackendPlan.from_json(json.dumps(d))  # noqa: E731
+        return cls(units_x=int(grid[0]), units_y=int(grid[1]),
+                   aggregate=sub(doc["aggregate"]),
+                   shards=tuple(sorted(
+                       (key, sub(val))
+                       for key, val in doc.get("shards", {}).items())),
+                   meta=tuple(sorted(doc.get("meta", {}).items())))
+
+    def save(self, path: str | os.PathLike) -> str:
+        """Write :meth:`to_json` to ``path`` (dirs created); returns path."""
+        path = os.fspath(path)
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+        with open(path, "w") as fh:
+            fh.write(self.to_json())
+            fh.write("\n")
+        return path
+
+    @classmethod
+    def load(cls, path: str | os.PathLike) -> "GridPlan":
+        with open(os.fspath(path)) as fh:
+            return cls.from_json(fh.read())
+
+
+def load_plan(path: str | os.PathLike) -> BackendPlan | GridPlan:
+    """Load either plan flavour by sniffing the ``schema`` field.
+
+    ``repro.backends.plan/v1`` → :class:`BackendPlan`;
+    ``repro.backends.gridplan/v1`` → :class:`GridPlan`.  Anything else is a
+    ValueError naming both accepted schemas.
+    """
+    with open(os.fspath(path)) as fh:
+        text = fh.read()
+    schema = json.loads(text).get("schema")
+    if schema == GRID_SCHEMA:
+        return GridPlan.from_json(text)
+    if schema == PLAN_SCHEMA:
+        return BackendPlan.from_json(text)
+    raise ValueError(f"{path}: unknown plan schema {schema!r} "
+                     f"(expected {PLAN_SCHEMA!r} or {GRID_SCHEMA!r})")

@@ -40,6 +40,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 import threading
 
 from repro.backends.base import GemmBackend
@@ -47,10 +48,13 @@ from repro.backends.base import GemmBackend
 # NOTE: repro.backends.registry is imported lazily inside use_backend —
 # registry pulls in repro.configs, whose model-config import would close a
 # cycle with the model modules that import site_scope from here.
+# repro.backends.grid is imported lazily for the same reason grid execution
+# is lazy about devices: scoping must stay importable everywhere.
 
 __all__ = ["ExecutedGemm", "BackendExecution", "PlanExecution",
            "SiteRecorder", "use_backend", "use_plan", "record_sites",
-           "active_backend", "active_execution", "site_scope", "current_site"]
+           "active_backend", "active_execution", "site_scope", "current_site",
+           "measure_matrix_cycles"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,15 +108,20 @@ class BackendExecution:
 class PlanExecution(BackendExecution):
     """Live handle for one :func:`use_plan` scope.
 
-    ``plan`` — the :class:`~repro.backends.plan.BackendPlan`; ``backend`` is
-    None (there is no single engine — :meth:`backend_for` resolves per site).
-    Backends are resolved once per site name and cached for the scope's
-    lifetime, so re-tracing is cheap and every trace sees the same objects.
+    ``plan`` — the :class:`~repro.backends.plan.BackendPlan` (or a
+    :class:`~repro.backends.grid.GridPlan`, which wraps its aggregate
+    entries in grid backends itself); ``backend`` is None (there is no
+    single engine — :meth:`backend_for` resolves per site).  ``grid`` — an
+    optional (units_x, units_y) shape that wraps every resolved backend in a
+    :class:`~repro.backends.grid.GridBackend`.  Backends are resolved once
+    per site name and cached for the scope's lifetime, so re-tracing is
+    cheap and every trace sees the same objects.
     """
 
-    def __init__(self, plan) -> None:
+    def __init__(self, plan, grid: tuple[int, int] | None = None) -> None:
         super().__init__(backend=None)
         self.plan = plan
+        self.grid = grid
         self._cache: dict[str, GemmBackend | None] = {}
 
     def backend_for(self, site: str) -> GemmBackend | None:
@@ -120,6 +129,9 @@ class PlanExecution(BackendExecution):
             return self._cache[site]
         except KeyError:
             backend = self.plan.backend_for(site)
+            if backend is not None and self.grid is not None:
+                from repro.backends.grid import as_grid
+                backend = as_grid(backend, *self.grid)
             self._cache[site] = backend
             return backend
 
@@ -219,37 +231,116 @@ def _pushed(execution: BackendExecution):
 
 @contextlib.contextmanager
 def use_backend(spec: str | GemmBackend, *, bits: int | None = None,
-                block=None, interpret: bool | None = None):
+                block=None, interpret: bool | None = None, grid=None):
     """Execute every ``dense`` contraction in the block on ``spec``.
 
-    Args as :func:`repro.backends.resolve`.  Yields the scope's
-    :class:`BackendExecution` (``.backend``, ``.calls``).  Scopes nest — the
-    innermost wins — and unwind correctly on exceptions.
+    Args as :func:`repro.backends.resolve`, plus ``grid`` — an optional
+    (units_x, units_y) tuple or ``"X,Y"`` string that wraps the resolved
+    backend in a :class:`~repro.backends.grid.GridBackend`, so every dense
+    contraction is sharded across the PE-array grid under ``shard_map``.
+    Yields the scope's :class:`BackendExecution` (``.backend``, ``.calls``).
+    Scopes nest — the innermost wins — and unwind correctly on exceptions.
     """
     from repro.backends.registry import resolve
-    execution = BackendExecution(resolve(spec, bits=bits, block=block,
-                                         interpret=interpret))
+    backend = resolve(spec, bits=bits, block=block, interpret=interpret)
+    if grid is not None:
+        from repro.backends.grid import as_grid, parse_grid
+        backend = as_grid(backend, *parse_grid(grid))
+    execution = BackendExecution(backend)
     with _pushed(execution):
         yield execution
 
 
 @contextlib.contextmanager
-def use_plan(plan):
+def use_plan(plan, *, grid=None):
     """Execute every ``dense`` contraction on the site's planned backend.
 
-    ``plan`` — a :class:`~repro.backends.plan.BackendPlan` (or a path-like /
-    str, loaded via :meth:`BackendPlan.load`).  Each dense site is matched
-    against the plan's patterns (most specific wins, see
-    ``repro.backends.plan``); unmatched sites run the float path.  Yields a
-    :class:`PlanExecution` whose ``.calls`` lists every contracted site with
-    the backend it actually ran on.  Nests with :func:`use_backend`
-    (innermost scope wins) and unwinds on exceptions.
+    ``plan`` — a :class:`~repro.backends.plan.BackendPlan`, a
+    :class:`~repro.backends.grid.GridPlan`, or a path-like / str (loaded via
+    :func:`repro.backends.grid.load_plan`, which sniffs the schema).  Each
+    dense site is matched against the plan's patterns (most specific wins,
+    see ``repro.backends.plan``); unmatched sites run the float path.
+
+    ``grid`` — optional (units_x, units_y) / ``"X,Y"`` grid every resolved
+    backend is wrapped in.  A :class:`GridPlan` brings its own grid (its
+    aggregate entries execute grid-wrapped; shard-local site names resolve
+    to single-node backends) — passing a mismatching ``grid`` next to one is
+    an error.
+
+    Yields a :class:`PlanExecution` whose ``.calls`` lists every contracted
+    site with the backend it actually ran on.  Nests with
+    :func:`use_backend` (innermost scope wins) and unwinds on exceptions.
     """
+    from repro.backends.grid import GridPlan, load_plan, parse_grid
     from repro.backends.plan import BackendPlan
-    if not isinstance(plan, BackendPlan):
-        plan = BackendPlan.load(plan)
-    with _pushed(PlanExecution(plan)) as execution:
+    if not isinstance(plan, (BackendPlan, GridPlan)):
+        plan = load_plan(plan)
+    if grid is not None:
+        grid = parse_grid(grid)
+    if isinstance(plan, GridPlan):
+        if grid is not None and grid != plan.grid:
+            raise ValueError(f"use_plan(grid={grid}) conflicts with the "
+                             f"GridPlan's own grid {plan.grid}")
+        grid = None  # GridPlan.backend_for wraps its aggregate itself
+    with _pushed(PlanExecution(plan, grid=grid)) as execution:
         yield execution
+
+
+def measure_matrix_cycles(backend: GemmBackend, weight, *, rows: int,
+                          unit_n: int, num_units: int,
+                          bit_blockmax: float | None = None,
+                          bit_elem: float | None = None) -> dict[str, float]:
+    """Measured-cycles contract for ONE (k, n_out) weight matrix on one
+    backend — the single implementation behind both the planner's per-site
+    report (``eval/planner.measure_site_cycles``) and the serve driver's
+    decode totals (``launch/serve.measure_decode_cycles``).
+
+    Quantizes ``weight`` per output channel (exactly what
+    ``models/common.dense`` contracts under a scope) and returns cycles for
+    one invocation of the ``(rows, k) @ (k, n_out)`` decode GEMM on the
+    ``core.ppa.DLAModel`` tiling (per-tile cycles × ⌈tiles / num_units⌉
+    waves), four ways:
+
+    * ``measured`` — operand-driven early termination,
+      ``backend.dyn_cycles(operand=codes)``;
+    * ``dyn`` — paper Eq. 1 from the block-max statistic (profiled here at
+      ``backend.bits`` unless ``bit_blockmax`` is supplied);
+    * ``dyn_floor`` — Eq. 1 from the element-level statistic (optimistic
+      bound the shared slot schedule cannot beat);
+    * ``wc`` — worst case.
+
+    For sparsity-aware designs ``dyn_floor ≤ measured ≤ wc``; designs
+    without early termination report measured == dyn == floor == wc.
+
+    Grid backends stay consistent with their per-shard cycle model: the
+    per-tile cycles already cover the ceil-split contraction (plus hops),
+    so the wave count comes from a *shard's* output tile share
+    (``⌈n_out / units_y⌉``), matching ``ppa.GridDLAModel`` — all shards
+    run their waves in parallel.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import ppa, sparsity
+    from repro.core.quantization import quantize
+
+    w = jnp.asarray(weight)
+    k, n_out = int(w.shape[0]), int(w.shape[1])
+    if bit_blockmax is None or bit_elem is None:
+        st = sparsity.profile_tensor(w, bits=backend.bits)
+        bit_blockmax = st.bit_blockmax if bit_blockmax is None else bit_blockmax
+        bit_elem = st.bit_elem if bit_elem is None else bit_elem
+    dla = ppa.DLAModel(design=backend.pricing_design, bits=backend.bits,
+                       n=unit_n, num_units=num_units)
+    shard_n_out = math.ceil(n_out / getattr(backend, "units_y", 1))
+    waves = math.ceil(dla.tiles(rows, shard_n_out) / num_units)
+    codes = quantize(w, bits=backend.bits).values
+    return {
+        "measured": float(backend.dyn_cycles(operand=codes)) * waves,
+        "dyn": float(backend.dyn_cycles(k, bit_sparsity=bit_blockmax)) * waves,
+        "dyn_floor": float(backend.dyn_cycles(k, bit_sparsity=bit_elem))
+        * waves,
+        "wc": float(backend.cycles(k)) * waves,
+    }
 
 
 @contextlib.contextmanager

@@ -29,6 +29,8 @@ from repro.core.gemm_sims import DESIGNS, wc_cycles
 
 __all__ = [
     "CLOCK_PERIOD_NS",
+    "HOP_CYCLES",
+    "HOP_ENERGY_PJ_PER_BYTE",
     "AREA_UM2",
     "POWER_MW",
     "area_um2",
@@ -40,9 +42,21 @@ __all__ = [
     "dynamic_energy_nj",
     "PPAQuery",
     "DLAModel",
+    "GridDLAModel",
 ]
 
 CLOCK_PERIOD_NS = 2.5  # 400 MHz, Nangate45 (paper §III-A)
+
+# --- Inter-chip interconnect model (GridDLAModel) ---------------------------
+# The paper prices single units; composing them into a multi-chip grid adds
+# link traffic the unit tables cannot see.  One hop = moving one shard-local
+# operand/result tile to a neighbouring chip over a NoC-class link.  The
+# constants are deliberately round figures in the range of published 2.5-D
+# interposer links (~32 link cycles latency, ~10 pJ/byte including SerDes) —
+# they set the *scale* of the composition overhead, not a calibrated value,
+# and every grid number the repo emits carries them explicitly.
+HOP_CYCLES = 32              # link latency per hop, in unit clock cycles
+HOP_ENERGY_PJ_PER_BYTE = 10.0  # link energy per byte moved chip-to-chip
 
 # --- Table I: post-synthesis cell area (um^2) --------------------------------
 # key: (bits, n) ; value order follows DESIGNS = (ugemm, tugemm, tubgemm, bgemm)
@@ -280,3 +294,98 @@ class DLAModel:
     def total_area_mm2(self) -> float:
         """Silicon area of the whole unit grid in **mm^2**."""
         return area_um2(self.design, self.bits, self.n) * 1e-6 * self.num_units
+
+
+@dataclasses.dataclass(frozen=True)
+class GridDLAModel:
+    """A tensor-parallel grid of ``units_x`` × ``units_y`` DLA nodes.
+
+    Each node is a :class:`DLAModel` (``num_units`` n×n units of ``design``
+    at ``bits``).  One (M, K) @ (K, N_out) matmul is sharded the way
+    ``repro.backends.grid.GridBackend.execute`` executes it: the contraction
+    dim K is ceil-split ``units_x`` ways (partial sums reduced chip-to-chip),
+    N_out is ceil-split ``units_y`` ways (disjoint output column slices), M
+    is replicated.  Latency is the per-shard latency plus the interconnect
+    critical path; energy is the per-shard energy summed over all shards plus
+    the link energy of the activation fan-out and the partial-sum reduction.
+    """
+
+    design: str = "tubgemm"
+    bits: int = 4
+    n: int = 128
+    num_units: int = 1
+    units_x: int = 1          # K-dim partitions (partial-sum reduction)
+    units_y: int = 1          # N-dim partitions (disjoint column slices)
+
+    def __post_init__(self) -> None:
+        if self.units_x < 1 or self.units_y < 1:
+            raise ValueError(f"grid must be >= 1x1, got "
+                             f"{self.units_x}x{self.units_y}")
+
+    @property
+    def num_shards(self) -> int:
+        return self.units_x * self.units_y
+
+    def node(self) -> DLAModel:
+        """The per-shard single-chip cost model."""
+        return DLAModel(design=self.design, bits=self.bits, n=self.n,
+                        num_units=self.num_units)
+
+    def shard_dims(self, k: int, n_out: int) -> tuple[int, int]:
+        """Per-shard (k, n_out) after the ceil-split (padded rows/cols)."""
+        return (math.ceil(k / self.units_x), math.ceil(n_out / self.units_y))
+
+    def utilization(self, m: int, k: int, n_out: int) -> float:
+        """Useful MACs / padded MACs across the grid, in (0, 1].
+
+        1.0 when ``units_x | k`` and ``units_y | n_out``; below 1.0 the
+        ceil-split pads the operands with zero codes and the padded lanes
+        burn cycles without contributing."""
+        ks, ns = self.shard_dims(k, n_out)
+        return (m * k * n_out) / (m * ks * self.units_x * ns * self.units_y)
+
+    def hop_latency_ns(self) -> float:
+        """Interconnect critical path per matmul: the activation fan-out
+        across ``units_y`` columns plus the ``units_x``-chip partial-sum
+        reduction, one hop each step."""
+        hops = (self.units_x - 1) + (self.units_y - 1)
+        return hops * HOP_CYCLES * CLOCK_PERIOD_NS
+
+    def hop_energy_nj(self, m: int, k: int, n_out: int) -> float:
+        """Link energy per matmul in **nJ**.
+
+        Two traffic terms: every activation shard is fanned out to the other
+        ``units_y - 1`` column replicas (w-bit codes), and every output
+        column slice is reduced across ``units_x`` chips ((units_x - 1)
+        int32 partial-tile moves).  Padded dims are what actually moves.
+        """
+        if self.num_shards == 1:
+            return 0.0
+        ks, ns = self.shard_dims(k, n_out)
+        a_bytes = m * ks * self.units_x * self.bits / 8.0
+        psum_bytes = m * ns * self.units_y * 4.0
+        pj = ((self.units_y - 1) * a_bytes + (self.units_x - 1) * psum_bytes) \
+            * HOP_ENERGY_PJ_PER_BYTE
+        return pj * 1e-3
+
+    def matmul_latency_ns(self, m: int, k: int, n_out: int,
+                          bit_sparsity: float = 0.0) -> float:
+        """End-to-end grid matmul latency in **ns**: all shards run in
+        parallel (equal padded sizes), so per-shard latency + hop path."""
+        ks, ns = self.shard_dims(k, n_out)
+        return self.node().matmul_latency_ns(m, ks, ns, bit_sparsity) \
+            + self.hop_latency_ns()
+
+    def matmul_energy_nj(self, m: int, k: int, n_out: int,
+                         bit_sparsity: float = 0.0) -> float:
+        """Total grid matmul energy in **nJ**: per-shard compute energy
+        summed over all ``units_x * units_y`` shards, plus link energy."""
+        ks, ns = self.shard_dims(k, n_out)
+        compute = self.node().matmul_energy_nj(m, ks, ns, bit_sparsity) \
+            * self.num_shards
+        return compute + self.hop_energy_nj(m, k, n_out)
+
+    @property
+    def total_area_mm2(self) -> float:
+        """Silicon area of every node's unit grid in **mm^2**."""
+        return self.node().total_area_mm2 * self.num_shards

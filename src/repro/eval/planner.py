@@ -34,13 +34,14 @@ priced dynamic energy).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.backends import grid as grid_lib
+from repro.backends import runtime as runtime_lib
 from repro.backends.plan import BackendPlan, SiteAssignment
 from repro.core import ppa, sparsity
 from repro.core.quantization import quantize
@@ -57,9 +58,12 @@ __all__ = [
     "price_site",
     "site_candidates",
     "build_plan",
+    "build_grid_plan",
     "measure_site_cycles",
+    "measure_grid_site_cycles",
     "plan_totals",
     "to_markdown",
+    "grid_plan_to_markdown",
 ]
 
 #: candidate operand widths (paper grid); 2-bit usually fails the guard
@@ -79,8 +83,13 @@ class GemmSite:
     weight's parameter-tree path); ``m``/``k``/``n_out`` — the per-invocation
     contraction ``(m, k) @ (k, n_out)`` ``dense`` performs there; ``count`` —
     invocations per forward pass (scanned layers, shared-block applications);
-    ``weight`` — the site's weight as the (count · k, n_out) float32 matrix
-    the contraction consumes, all invocations stacked along rows.
+    ``leaf`` — the site's parameter-tree leaf, held by reference (zero-copy).
+
+    The float32 profiling matrix is materialized **on demand** by
+    :meth:`weight_matrix` and dropped by the caller when it moves to the
+    next site, so a full-model planning pass peaks at ONE weight matrix of
+    float32 scratch instead of a copy of the whole model (the ROADMAP-flagged
+    memory hazard).
     """
 
     name: str
@@ -88,7 +97,17 @@ class GemmSite:
     k: int
     n_out: int
     count: int
-    weight: np.ndarray = dataclasses.field(repr=False, compare=False)
+    leaf: object = dataclasses.field(repr=False, compare=False)
+
+    def weight_matrix(self) -> np.ndarray:
+        """The (count · k, n_out) float32 matrix the contraction consumes
+        (all invocations stacked along rows), materialized fresh per call."""
+        return np.asarray(self.leaf, np.float32).reshape(-1, self.n_out)
+
+    @property
+    def weight(self) -> np.ndarray:
+        """Back-compat alias for :meth:`weight_matrix` (materializes)."""
+        return self.weight_matrix()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,6 +146,11 @@ def discover_sites(cfg, params, *, batch: int = 1,
     number of shared-block applications for the hybrid family's ``shared/…``
     sites (a scanned body traces once; see the runtime jit caveat).
 
+    Discovery itself never materializes a weight: sites hold the parameter
+    leaves by reference and stream one float32 matrix at a time through
+    :meth:`GemmSite.weight_matrix` (like serve's ``_iter_weight_matrices``),
+    bounding the planner's peak scratch memory at one matrix.
+
     ``m`` is reported for a *decode step*: ``batch`` rows per invocation
     (``seq_len`` only shapes the discovery trace).  Returns sites in model
     order, deduplicated by name.
@@ -163,7 +187,6 @@ def discover_sites(cfg, params, *, batch: int = 1,
             raise ValueError(
                 f"recorded site {call.site!r} has no parameter-tree leaf — "
                 "a dense(name=...) annotation disagrees with the param path")
-        w = np.asarray(leaf, np.float32).reshape(-1, call.n_out)
         count = leaf.size // (call.k * call.n_out)
         if count * call.k * call.n_out != leaf.size:
             raise ValueError(
@@ -173,7 +196,7 @@ def discover_sites(cfg, params, *, batch: int = 1,
             count *= shared_applications
         sites.append(GemmSite(name=call.site, m=max(int(batch), 1),
                               k=call.k, n_out=call.n_out, count=count,
-                              weight=w))
+                              leaf=leaf))
     return sites
 
 
@@ -230,12 +253,15 @@ def site_candidates(site: GemmSite, *,
     (per-tensor quantization grid, ``block``×``block`` maxima for the Eq. 1
     statistic); the guard statistic is :func:`quantization_rel_mse` at each
     bit-width.  ``guard_ok`` is False where ``rel_mse > max_rel_mse``.
+
+    The weight is materialized once for the call and released with it (the
+    streaming contract — see :class:`GemmSite`).
     """
+    weight = jnp.asarray(site.weight_matrix())
     out: list[Candidate] = []
     for bits in bits_candidates:
-        stats = sparsity.profile_tensor(jnp.asarray(site.weight), bits=bits,
-                                        block=block)
-        rel_mse = quantization_rel_mse(site.weight, bits)
+        stats = sparsity.profile_tensor(weight, bits=bits, block=block)
+        rel_mse = quantization_rel_mse(weight, bits)
         guard_ok = rel_mse <= max_rel_mse
         for design in designs:
             priced = price_site(design, bits, m=site.m, k=site.k,
@@ -346,50 +372,377 @@ def build_plan(cfg, params, *, batch: int = 1,
                        meta=tuple(sorted(meta.items())))
 
 
+def _zero_totals() -> dict[str, float]:
+    return {"dyn_energy_uj": 0.0, "dyn_latency_us": 0.0,
+            "wc_energy_uj": 0.0, "wc_latency_us": 0.0}
+
+
+def _assignment(site: GemmSite, best: Candidate, relaxed: bool, *,
+                k: int, n_out: int) -> SiteAssignment:
+    """A plan entry for ``site`` from a picked candidate (``k``/``n_out``
+    record the priced contraction — full dims for aggregate entries, the
+    shard's real slice dims for per-shard entries)."""
+    return SiteAssignment(
+        pattern=site.name, design=best.design, bits=best.bits,
+        m=site.m, k=int(k), n_out=int(n_out), count=site.count,
+        word=best.stats.word, bit_elem=best.stats.bit_elem,
+        bit_blockmax=best.stats.bit_blockmax,
+        dyn_energy_uj=best.dyn_energy_uj,
+        dyn_latency_us=best.dyn_latency_us,
+        wc_energy_uj=best.wc_energy_uj,
+        wc_latency_us=best.wc_latency_us,
+        rel_mse=best.rel_mse, guard_relaxed=relaxed)
+
+
+def _fold_uniform(uniform: dict, cands: list[Candidate]) -> None:
+    """Accumulate every candidate into the per-(design, bits) uniform
+    baselines (a uniform assignment is infeasible once any site's guard
+    rejects that bit-width)."""
+    for c in cands:
+        tot = uniform[(c.design, c.bits)]
+        if not c.guard_ok:
+            tot["feasible"] = False
+        for key in _zero_totals():
+            tot[key] += getattr(c, key)
+
+
+def _uniform_verdict(uniform: dict, planned: dict,
+                     objective: str) -> dict:
+    """The planned-vs-uniform totals block (shared by plan flavours)."""
+    feasible = {f"{d}@{b}": {k: v for k, v in tot.items() if k != "feasible"}
+                for (d, b), tot in uniform.items() if tot["feasible"]}
+    best = (min(feasible, key=lambda name: feasible[name][objective])
+            if feasible else None)
+    return {"planned": planned, "uniform": feasible, "uniform_best": best}
+
+
+def build_grid_plan(cfg, params, *, grid=(2, 2), batch: int = 1,
+                    bits_candidates: Sequence[int] = DEFAULT_BITS_CANDIDATES,
+                    designs: Sequence[str] = DEFAULT_DESIGNS,
+                    objective: str = "dyn_energy_uj",
+                    max_rel_mse: float = DEFAULT_MAX_REL_MSE,
+                    unit_n: int = 64, num_units: int = 64,
+                    seq_len: int = 8,
+                    sites: list[GemmSite] | None = None):
+    """Derive a per-shard heterogeneous :class:`repro.backends.grid.GridPlan`.
+
+    Shards every site's weight the way ``GridBackend.execute`` does (K rows
+    ceil-split over ``units_x``, output columns over ``units_y``), profiles
+    **each shard's slice separately** — a shard's weight slice has its own
+    sparsity, so the Eq. 1-priced winner may differ across shards — and
+    prices every (shard, design, bits) candidate on the per-node DLA tiling
+    (padded shard dims) plus that shard's share of the interconnect-hop
+    energy and the full hop latency.
+
+    The accuracy guard uses the **full-weight** quantization error at each
+    bit-width: execution quantizes the whole weight per output channel
+    before sharding the codes, so the shard slices see the full tensor's
+    quantization grid — and per-shard, aggregate and uniform candidate sets
+    then share one feasibility structure, keeping the planned-total ≤
+    best-uniform property airtight at every level.
+
+    Returns a :class:`~repro.backends.grid.GridPlan`: one
+    :class:`BackendPlan` per shard (its meta carries that shard's
+    planned-vs-uniform verdict), the *aggregate* plan SPMD execution replays
+    (per-site argmin of the summed per-shard cost), and a meta block with
+    the per-shard and aggregate verdicts plus the sites whose assignment is
+    heterogeneous across shards.
+    """
+    grid = grid_lib.parse_grid(grid)
+    units_x, units_y = grid
+    num_shards = units_x * units_y
+    if sites is None:
+        sites = discover_sites(cfg, params, batch=batch, seq_len=seq_len)
+    if not sites:
+        raise ValueError("model exposes no dense GEMM sites to plan")
+
+    shard_keys = [f"{gx},{gy}" for gx in range(units_x)
+                  for gy in range(units_y)]
+    shard_entries: dict[str, list[SiteAssignment]] = \
+        {k: [] for k in shard_keys}
+    shard_uniform = {k: {(d, b): {**_zero_totals(), "feasible": True}
+                         for d in designs for b in bits_candidates}
+                     for k in shard_keys}
+    agg_entries: list[SiteAssignment] = []
+    agg_uniform = {(d, b): {**_zero_totals(), "feasible": True}
+                   for d in designs for b in bits_candidates}
+
+    for site in sites:
+        weight = site.weight_matrix()          # streamed: one site at a time
+        w3, _applications = _site_copies(site, weight)
+        full = jnp.asarray(weight)
+        full_mse = {b: quantization_rel_mse(full, b) for b in bits_candidates}
+        full_stats = {b: sparsity.profile_tensor(full, bits=b)
+                      for b in bits_candidates}
+        ks_pad = -(-site.k // units_x)
+        ns_pad = -(-site.n_out // units_y)
+        agg_costs: dict[tuple[str, int], dict[str, float]] = {}
+
+        def _fold_agg(priced: dict[str, float], design: str,
+                      bits: int) -> None:
+            # energy sums across shards; shards run in parallel, so the
+            # grid's latency is the slowest shard's (matching GridDLAModel)
+            agg = agg_costs.setdefault((design, bits), _zero_totals())
+            for key in ("dyn_energy_uj", "wc_energy_uj"):
+                agg[key] += priced[key]
+            for key in ("dyn_latency_us", "wc_latency_us"):
+                agg[key] = max(agg[key], priced[key])
+
+        for (gx, gy), (rows_sl, cols_sl) in grid_lib.shard_slices(
+                site.k, site.n_out, units_x, units_y).items():
+            sub = w3[:, rows_sl, cols_sl]
+            # A pure-padding shard (units_x ∤ k) has nothing to plan, but
+            # execution still streams its zero codes and the reduction
+            # still crosses it: charge its padded compute (all-zero codes
+            # → block-max sparsity 1.0) and hop share into the aggregate,
+            # keeping planner totals consistent with the grid pricer.
+            padding_only = sub.size == 0
+            if padding_only:
+                shard_stats = {b: sparsity.SparsityStats(
+                    bits=b, word=1.0, bit_elem=1.0, bit_blockmax=1.0,
+                    numel=0) for b in bits_candidates}
+            else:
+                sub2 = jnp.asarray(sub.reshape(-1, sub.shape[-1]))
+                shard_stats = {b: sparsity.profile_tensor(sub2, bits=b)
+                               for b in bits_candidates}
+            cands: list[Candidate] = []
+            for bits in bits_candidates:
+                stats = shard_stats[bits]
+                guard_ok = full_mse[bits] <= max_rel_mse
+                for design in designs:
+                    node = ppa.DLAModel(design=design, bits=bits, n=unit_n,
+                                        num_units=num_units)
+                    gdla = ppa.GridDLAModel(
+                        design=design, bits=bits, n=unit_n,
+                        num_units=num_units, units_x=units_x,
+                        units_y=units_y)
+                    hop_e = gdla.hop_energy_nj(site.m, site.k, site.n_out) \
+                        / num_shards * site.count * 1e-3
+                    hop_l = gdla.hop_latency_ns() * site.count * 1e-3
+                    priced = {
+                        "dyn_energy_uj": node.matmul_energy_nj(
+                            site.m, ks_pad, ns_pad, stats.bit_blockmax)
+                        * site.count * 1e-3 + hop_e,
+                        "dyn_latency_us": node.matmul_latency_ns(
+                            site.m, ks_pad, ns_pad, stats.bit_blockmax)
+                        * site.count * 1e-3 + hop_l,
+                        "wc_energy_uj": node.matmul_energy_nj(
+                            site.m, ks_pad, ns_pad, 0.0)
+                        * site.count * 1e-3 + hop_e,
+                        "wc_latency_us": node.matmul_latency_ns(
+                            site.m, ks_pad, ns_pad, 0.0)
+                        * site.count * 1e-3 + hop_l,
+                    }
+                    _fold_agg(priced, design, bits)
+                    if not padding_only:
+                        cands.append(Candidate(design=design, bits=bits,
+                                               stats=stats,
+                                               rel_mse=full_mse[bits],
+                                               guard_ok=guard_ok, **priced))
+            if padding_only:
+                continue
+            best, relaxed = _pick(cands, objective)
+            key = f"{gx},{gy}"
+            shard_entries[key].append(_assignment(
+                site, best, relaxed, k=sub.shape[1], n_out=sub.shape[2]))
+            _fold_uniform(shard_uniform[key], cands)
+        agg_cands = [
+            Candidate(design=d, bits=b, stats=full_stats[b],
+                      rel_mse=full_mse[b],
+                      guard_ok=full_mse[b] <= max_rel_mse, **vals)
+            for (d, b), vals in sorted(agg_costs.items())]
+        best, relaxed = _pick(agg_cands, objective)
+        agg_entries.append(_assignment(site, best, relaxed,
+                                       k=site.k, n_out=site.n_out))
+        _fold_uniform(agg_uniform, agg_cands)
+
+    common = {
+        "arch": getattr(cfg, "arch_id", None),
+        "grid": list(grid),
+        "objective": objective,
+        "bits_candidates": list(bits_candidates),
+        "designs": list(designs),
+        "max_rel_mse": max_rel_mse,
+        "unit_n": unit_n,
+        "num_units": num_units,
+        "batch": batch,
+    }
+    shards = []
+    per_shard_verdicts = {}
+    hetero_planned = _zero_totals()
+    for key in shard_keys:
+        entries = shard_entries[key]
+        if not entries:
+            continue
+        verdict = _uniform_verdict(shard_uniform[key], plan_totals(entries),
+                                   objective)
+        per_shard_verdicts[key] = verdict
+        for tkey in ("dyn_energy_uj", "wc_energy_uj"):
+            hetero_planned[tkey] += verdict["planned"][tkey]
+        for tkey in ("dyn_latency_us", "wc_latency_us"):
+            # shards run in parallel: heterogeneous latency = slowest shard
+            hetero_planned[tkey] = max(hetero_planned[tkey],
+                                       verdict["planned"][tkey])
+        shards.append((key, BackendPlan(
+            sites=tuple(entries),
+            meta=tuple(sorted({**common, "shard": key,
+                               "totals": verdict}.items())))))
+    agg_verdict = _uniform_verdict(agg_uniform, plan_totals(agg_entries),
+                                   objective)
+    aggregate = BackendPlan(
+        sites=tuple(agg_entries),
+        meta=tuple(sorted({**common, "shard": None,
+                           "totals": agg_verdict}.items())))
+    gplan = grid_lib.GridPlan(units_x=units_x, units_y=units_y,
+                              aggregate=aggregate, shards=tuple(shards))
+    meta = {
+        **common,
+        "totals": {
+            "aggregate": {**agg_verdict,
+                          "planned_heterogeneous": hetero_planned},
+            "per_shard": per_shard_verdicts,
+        },
+        "heterogeneous_sites": list(gplan.heterogeneous_sites()),
+    }
+    return dataclasses.replace(gplan, meta=tuple(sorted(meta.items())))
+
+
+def grid_plan_to_markdown(gplan) -> str:
+    """Human-readable rendering of a grid plan (``reports/grid.md`` body)."""
+    meta = gplan.metadata()
+    totals = meta.get("totals", {})
+    agg = totals.get("aggregate", {})
+    lines = [
+        "# Per-shard mixed-precision grid plan",
+        "",
+        f"Arch: `{meta.get('arch')}` on a {gplan.units_x}×{gplan.units_y} "
+        f"PE-array grid of {meta.get('num_units')}× {meta.get('unit_n')}×"
+        f"{meta.get('unit_n')} DLA nodes — objective "
+        f"`{meta.get('objective')}`, decode batch {meta.get('batch')}.",
+        "",
+        "## Aggregate (executed) assignment",
+        "",
+        "| site | backend | b_spa | dyn energy (µJ) | guard |",
+        "|---|---|---|---|---|",
+    ]
+    for e in gplan.aggregate.sites:
+        guard = "relaxed" if e.guard_relaxed else "ok"
+        lines.append(f"| `{e.pattern}` ×{e.count} | {e.design}@{e.bits} | "
+                     f"{e.bit_blockmax:.3f} | {e.dyn_energy_uj:.4f} | "
+                     f"{guard} |")
+    planned = agg.get("planned", {})
+    hetero = agg.get("planned_heterogeneous", {})
+    lines += [
+        "",
+        f"**Aggregate planned**: {planned.get('dyn_energy_uj', 0.0):.4f} µJ "
+        f"dyn energy / decode step; per-shard heterogeneous planned: "
+        f"{hetero.get('dyn_energy_uj', 0.0):.4f} µJ.",
+        "",
+        "## Uniform grid baselines (guard-feasible)",
+        "",
+        "| uniform backend | dyn energy (µJ) | dyn latency (µs) |",
+        "|---|---|---|",
+    ]
+    uniform = agg.get("uniform", {})
+    for name in sorted(uniform):
+        tot = uniform[name]
+        mark = " ← best" if name == agg.get("uniform_best") else ""
+        lines.append(f"| {name}{mark} | {tot['dyn_energy_uj']:.4f} | "
+                     f"{tot['dyn_latency_us']:.4f} |")
+    lines += [
+        "",
+        "## Per-shard verdicts",
+        "",
+        "| shard | planned dyn energy (µJ) | best uniform | assignment |",
+        "|---|---|---|---|",
+    ]
+    for key, plan in gplan.shards:
+        verdict = totals.get("per_shard", {}).get(key, {})
+        p = verdict.get("planned", {}).get("dyn_energy_uj", 0.0)
+        best = verdict.get("uniform_best")
+        tags = ", ".join(f"{s.design}@{s.bits}" for s in plan.sites)
+        lines.append(f"| {key} | {p:.4f} | {best} | {tags} |")
+    hsites = meta.get("heterogeneous_sites", [])
+    lines += [
+        "",
+        f"Sites with shard-heterogeneous assignments: "
+        f"{', '.join(f'`{s}`' for s in hsites) if hsites else 'none'}.",
+        "",
+        "Per-site, per-shard argmin over the same candidate set makes every "
+        "shard's planned total ≤ its best uniform baseline and the "
+        "aggregate ≤ the best uniform grid assignment, by construction; "
+        "`use_plan` executes the aggregate under `shard_map` "
+        "(`serve --backend-plan … --grid X,Y` replays it with bit-exactness "
+        "and per-shard cycle-bound checks).",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def _site_copies(site: GemmSite, weight: np.ndarray) -> tuple[np.ndarray, int]:
+    """The site's physical weight copies and the application multiplier.
+
+    A site's ``count`` can exceed its physical weight copies (the hybrid
+    shared block applies one weight n_groups times per step): measure the
+    physical copies, scale by applications.  Returns ``(copies-stacked
+    (copies, k, n_out) array, applications)``.
+    """
+    copies = weight.shape[0] // site.k
+    return (weight.reshape(copies, site.k, site.n_out),
+            site.count // copies)
+
+
 def measure_site_cycles(site: GemmSite, entry, *, unit_n: int,
                         num_units: int) -> dict[str, float]:
     """Measured (operand-driven) decode-step cycles for one planned site.
 
-    Quantizes each of the site's ``count`` per-invocation weight matrices
-    per output channel — exactly what ``models/common.dense`` contracts
-    under the plan — and sums the entry's backend's early-terminating
-    ``dyn_cycles(operand=...)`` over them, times the DLA wave count.
-    Returns cycles per decode step:
-
-    * ``measured`` — operand-driven early termination;
-    * ``dyn`` — the plan's Eq. 1 estimate (worst case × (1 − block-max));
-    * ``dyn_floor`` — Eq. 1 with element-level sparsity (optimistic bound);
-    * ``wc`` — worst case.
-
-    For sparsity-aware designs ``dyn_floor ≤ measured ≤ wc``; designs
-    without early termination report all four equal.
+    Runs the shared measured-cycles contract
+    (``repro.backends.runtime.measure_matrix_cycles`` — the same helper the
+    serve driver totals with) over each of the site's physical weight
+    copies with the entry's profiled Eq. 1 statistics, and sums.  Returns
+    cycles per decode step: ``measured`` (operand-driven early termination),
+    ``dyn`` (Eq. 1 block-max), ``dyn_floor`` (Eq. 1 element-level), ``wc``
+    (worst case).  For sparsity-aware designs ``dyn_floor ≤ measured ≤ wc``;
+    designs without early termination report all four equal.
     """
     backend = entry.backend()
-    dla = ppa.DLAModel(design=backend.pricing_design, bits=backend.bits,
-                       n=unit_n, num_units=num_units)
-    waves = math.ceil(dla.tiles(site.m, site.n_out) / num_units)
-    # A site's count can exceed its physical weight copies (the hybrid
-    # shared block applies one weight n_groups times per step): measure the
-    # physical copies, scale by applications.
-    copies = site.weight.shape[0] // site.k
-    applications = site.count // copies
-    w3 = site.weight.reshape(copies, site.k, site.n_out)
-    measured = 0.0
-    for i in range(copies):
-        q = quantize(jnp.asarray(w3[i]), bits=backend.bits).values
-        measured += float(backend.dyn_cycles(operand=q))
-    measured *= applications
-    wc = float(backend.cycles(site.k)) * site.count
-    return {
-        "measured": measured * waves,
-        "dyn": float(backend.dyn_cycles(site.k,
-                                        bit_sparsity=entry.bit_blockmax))
-        * site.count * waves,
-        "dyn_floor": float(backend.dyn_cycles(site.k,
-                                              bit_sparsity=entry.bit_elem))
-        * site.count * waves,
-        "wc": wc * waves,
-    }
+    w3, applications = _site_copies(site, site.weight_matrix())
+    totals = {"measured": 0.0, "dyn": 0.0, "dyn_floor": 0.0, "wc": 0.0}
+    for i in range(w3.shape[0]):
+        cyc = runtime_lib.measure_matrix_cycles(
+            backend, w3[i], rows=site.m, unit_n=unit_n, num_units=num_units,
+            bit_blockmax=entry.bit_blockmax, bit_elem=entry.bit_elem)
+        for key in totals:
+            totals[key] += cyc[key]
+    return {key: val * applications for key, val in totals.items()}
+
+
+def measure_grid_site_cycles(site: GemmSite, entry, *, grid: tuple[int, int],
+                             unit_n: int, num_units: int
+                             ) -> dict[str, dict[str, float]]:
+    """Per-shard measured decode-step cycles for one planned site on a grid.
+
+    Like :func:`measure_site_cycles` but sharded: each grid node measures
+    its own weight slice (``repro.backends.grid_matrix_cycles`` — per-shard
+    tile counts, per-shard sparsity, hop term added to every bound), summed
+    over the site's physical copies and scaled by applications.  Returns
+    ``{"gx,gy": {measured, dyn, dyn_floor, wc}}``; the per-shard invariant
+    ``dyn_floor ≤ measured ≤ wc`` holds shard by shard.
+    """
+    backend = grid_lib.as_grid(entry.backend(), *grid)
+    w3, applications = _site_copies(site, site.weight_matrix())
+    totals: dict[str, dict[str, float]] = {}
+    for i in range(w3.shape[0]):
+        per_shard = grid_lib.grid_matrix_cycles(
+            backend, w3[i], rows=site.m, unit_n=unit_n, num_units=num_units)
+        for coord, cyc in per_shard.items():
+            tot = totals.setdefault(
+                coord, {"measured": 0.0, "dyn": 0.0, "dyn_floor": 0.0,
+                        "wc": 0.0})
+            for key in tot:
+                tot[key] += cyc[key]
+    return {coord: {key: val * applications for key, val in tot.items()}
+            for coord, tot in totals.items()}
 
 
 def plan_totals(entries) -> dict[str, float]:

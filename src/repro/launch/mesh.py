@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_mesh", "single_device_mesh"]
+__all__ = ["make_production_mesh", "make_mesh", "make_grid_mesh",
+           "single_device_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -34,6 +35,22 @@ def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
         raise RuntimeError(f"need {n} devices, have {len(devs)} "
                            "(dry-run must set xla_force_host_platform_device_count)")
     return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_grid_mesh(units_x: int, units_y: int):
+    """Mesh for a ``units_x`` × ``units_y`` PE-array grid backend.
+
+    Axes are ``("gx", "gy")`` — ``gx`` is the contraction-dim partition the
+    partial-sum psum reduces over, ``gy`` the output-column partition (see
+    ``repro.backends.grid``).  Deliberately disjoint from the model-parallel
+    axis names (``data``/``model``/``pod``) so the modeling layer's logical
+    sharding rules all fall back to replication on a grid mesh and the only
+    partitioned compute is the grid's own shard_map.
+
+    Needs ``units_x * units_y`` visible devices (pin fake host devices with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before jax init).
+    """
+    return make_mesh((units_x, units_y), ("gx", "gy"))
 
 
 def single_device_mesh(model_axis: bool = True):

@@ -21,17 +21,31 @@ This is where the paper's technique meets the serving stack:
   dense site contracted on the backend its plan entry names, with the same
   bit-exactness / drift / cycle-bounds evidence as --execute-backend, per
   site.
+* **grid serving** (--grid X,Y): everything above on a tensor-parallel
+  PE-array grid.  ``serve plan --grid X,Y`` derives a per-shard
+  heterogeneous ``GridPlan`` (each shard's weight slice has its own
+  sparsity profile); execution modes shard every dense contraction under
+  ``shard_map`` on an X×Y device mesh (``launch.mesh.make_grid_mesh``) with
+  the k-dim partial sums psum-reduced, report bit-exactness vs the
+  *unsharded* binary oracle, and check measured cycles within the
+  [Eq. 1 floor, wc] bounds per shard.
 
     PYTHONPATH=src python -m repro.launch.serve plan --arch llama3-8b \
         --smoke --unit-n 64 --plan-out reports/plan.json
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --smoke \
         --backend-plan reports/plan.json --tokens 8
+    # sharded: derive + replay a 2x2 grid plan on 4+ (fake) host devices
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve plan --arch llama3-8b --smoke \
+        --unit-n 64 --grid 2,2 --plan-out reports/grid_plan.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.serve --arch llama3-8b --smoke \
+        --backend-plan reports/grid_plan.json --grid 2,2 --tokens 8
 """
 
 from __future__ import annotations
 
 import argparse
-import math
 import time
 
 import jax
@@ -46,7 +60,7 @@ from repro.core.quantization import quantize
 from repro.eval import planner as planner_lib
 from repro.eval import sweetspot as sweetspot_lib
 from repro.launch import steps as steps_lib
-from repro.launch.mesh import single_device_mesh
+from repro.launch.mesh import make_grid_mesh, single_device_mesh
 from repro.models import model as model_lib
 
 
@@ -118,6 +132,9 @@ def measure_decode_cycles(cfg, params, backend, *, batch: int, unit_n: int,
                           num_units: int, stats=None) -> dict[str, float]:
     """Per-decode-token cycle totals for the model on one backend.
 
+    Sums the shared measured-cycles contract
+    (``repro.backends.measure_matrix_cycles`` — the same helper behind the
+    planner's ``measure_site_cycles``) over every priced weight matrix.
     Four numbers per the DLA tiling ``core.ppa.DLAModel`` uses (per-tile
     cycles x ceil(tiles / num_units) waves, common dim = k):
 
@@ -136,30 +153,22 @@ def measure_decode_cycles(cfg, params, backend, *, batch: int, unit_n: int,
       statistic profiles a per-tensor grid while execution contracts
       per-channel codes.
 
-    The Eq. 1 statistics follow the paper's per-tensor profiling
-    (``core.sparsity.profile_tensor``); ``measured`` reflects the executed
-    codes.  For sparsity-aware designs ``dyn_floor <= measured <= wc`` (wc
-    caps every step); designs without early termination report all four
-    equal.  The serve driver checks ``dyn_floor <= measured <= wc``.
+    For sparsity-aware designs ``dyn_floor <= measured <= wc`` (wc caps
+    every step); designs without early termination report all four equal.
+    The serve driver checks ``dyn_floor <= measured <= wc``.
 
     ``stats`` — optional ``{name: SparsityStats}`` at ``backend.bits`` (from
     ``build_workload``) to skip re-profiling every weight matrix.
     """
-    dla = ppa.DLAModel(design=backend.pricing_design, bits=backend.bits,
-                       n=unit_n, num_units=num_units)
     totals = {"wc": 0.0, "dyn": 0.0, "dyn_floor": 0.0, "measured": 0.0}
     for name, w in _iter_weight_matrices(cfg, params):
-        k, n_out = w.shape
-        # per-channel, matching models/common._backend_matmul exactly
-        q = quantize(jnp.asarray(w), bits=backend.bits).values
         st = (stats or {}).get(name)
-        if st is None:
-            st = sparsity.profile_tensor(jnp.asarray(w), bits=backend.bits)
-        waves = math.ceil(dla.tiles(batch, n_out) / num_units)
-        totals["wc"] += backend.cycles(k) * waves
-        totals["dyn"] += backend.dyn_cycles(k, bit_sparsity=st.bit_blockmax) * waves
-        totals["dyn_floor"] += backend.dyn_cycles(k, bit_sparsity=st.bit_elem) * waves
-        totals["measured"] += backend.dyn_cycles(operand=q) * waves
+        cyc = backends_lib.measure_matrix_cycles(
+            backend, w, rows=batch, unit_n=unit_n, num_units=num_units,
+            bit_blockmax=None if st is None else st.bit_blockmax,
+            bit_elem=None if st is None else st.bit_elem)
+        for key in totals:
+            totals[key] += cyc[key]
     return totals
 
 
@@ -247,12 +256,20 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
 
     Like :func:`run_backend_execution` but per-site: every dense site
     contracts on the backend its plan entry names (unmatched sites stay
-    float).  Returns generated ``tokens``, the ``site_backends`` mapping
-    actually traced, per-distinct-backend int-GEMM ``rel_rmse`` vs the
+    float).  ``plan`` may be a ``BackendPlan`` or a ``GridPlan`` — a grid
+    plan's aggregate entries execute sharded (``GridBackend`` under
+    ``shard_map`` on the grid mesh), the oracle comparison stays unsharded,
+    and the measured cycles come back **per shard**.
+
+    Returns generated ``tokens``, the ``site_backends`` mapping actually
+    traced, per-distinct-backend int-GEMM ``rel_rmse`` vs the (unsharded)
     binary oracle, prefill ``drift`` / ``top1_agreement`` vs the float
-    model, wall time, and per-site measured/dyn/floor/wc decode-cycle
-    totals (``site_cycles``, DLA geometry from the plan's meta).
+    model, wall time, the ``grid`` shape (None unsharded), and per-site
+    measured/dyn/floor/wc decode-cycle totals (``site_cycles``; for a grid,
+    ``{site: {"gx,gy": totals}}``; DLA geometry from the plan's meta).
     """
+    grid = plan.grid if isinstance(plan, backends_lib.GridPlan) else None
+    entry_plan = plan.aggregate if grid else plan
     if ref_logits is None:
         ref_logits = prefill_logits(cfg, params, mesh, prompt)
     t0 = time.time()
@@ -265,22 +282,31 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
             "plan execution contracted no GEMM sites — do the plan's "
             "patterns match this model's site names?")
     site_backends = {c.site: f"{c.backend}@{c.bits}" for c in execution.calls}
-    rel_rmse = {
-        f"{design}@{bits}": validate_backend_numerics(
-            params, backends_lib.resolve(design, bits=bits))
-        for design, bits in plan.distinct_backends()
-        if any(f"{design}@{bits}" == tag for tag in site_backends.values())}
+    rel_rmse = {}
+    for design, bits in entry_plan.distinct_backends():
+        tag = f"{design}@{bits}"
+        if not any(tag == t for t in site_backends.values()):
+            continue
+        backend = backends_lib.resolve(design, bits=bits)
+        if grid:
+            backend = backends_lib.as_grid(backend, *grid)
+        rel_rmse[tag] = validate_backend_numerics(params, backend)
     ref = np.asarray(ref_logits, np.float32)
     got = np.asarray(exec_logits, np.float32)
-    meta = plan.metadata()
+    meta = entry_plan.metadata()
     unit_n = int(meta.get("unit_n", 64))
     num_units = int(meta.get("num_units", 64))
     sites = {s.name: s for s in planner_lib.discover_sites(
         cfg, params, batch=prompt.shape[0])}
     site_cycles = {}
-    for entry in plan.sites:
+    for entry in entry_plan.sites:
         site = sites.get(entry.pattern)
-        if site is not None and entry.pattern in site_backends:
+        if site is None or entry.pattern not in site_backends:
+            continue
+        if grid:
+            site_cycles[entry.pattern] = planner_lib.measure_grid_site_cycles(
+                site, entry, grid=grid, unit_n=unit_n, num_units=num_units)
+        else:
             site_cycles[entry.pattern] = planner_lib.measure_site_cycles(
                 site, entry, unit_n=unit_n, num_units=num_units)
     return {
@@ -291,6 +317,7 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
         "drift": gemm_sims_lib.rel_rmse(got, ref),
         "top1_agreement": float(np.mean(np.argmax(got, -1)
                                         == np.argmax(ref, -1))),
+        "grid": grid,
         "site_cycles": site_cycles,
     }
 
@@ -340,6 +367,56 @@ def run_plan_mode(args, cfg, params) -> int:
     return 0
 
 
+def run_grid_plan_mode(args, cfg, params, grid: tuple[int, int]) -> int:
+    """``serve plan --grid X,Y``: derive, save and report a per-shard plan."""
+    site_list = planner_lib.discover_sites(cfg, params, batch=args.batch)
+    gplan = planner_lib.build_grid_plan(
+        cfg, params, grid=grid, batch=args.batch, unit_n=args.unit_n,
+        num_units=args.units, sites=site_list)
+    path = gplan.save(args.plan_out)
+    meta = gplan.metadata()
+    totals = meta["totals"]
+    agg = totals["aggregate"]
+    sites = {s.name: s for s in site_list}
+
+    print(f"\n=== grid backend plan for {args.arch} "
+          f"({grid[0]}x{grid[1]} grid of {args.units}x {args.unit_n}x"
+          f"{args.unit_n} nodes, objective {meta['objective']}) ===")
+    print("aggregate (executed) assignment, with per-shard measured cycles:")
+    for e in gplan.aggregate.sites:
+        cyc = planner_lib.measure_grid_site_cycles(
+            sites[e.pattern], e, grid=grid, unit_n=args.unit_n,
+            num_units=args.units)
+        shard_meas = ", ".join(f"{c}:{v['measured']:.0f}"
+                               for c, v in sorted(cyc.items()))
+        print(f"  {e.pattern:>24s} -> {e.design}@{e.bits} "
+              f"(b_spa {e.bit_blockmax:.3f}, dynE {e.dyn_energy_uj:.4f} uJ; "
+              f"measured cyc/shard {shard_meas})")
+    print("\nper-shard verdicts (each shard plans its own weight slices):")
+    for key, _plan in gplan.shards:
+        v = totals["per_shard"][key]
+        best = v["uniform_best"]
+        best_e = v["uniform"][best]["dyn_energy_uj"] if best else 0.0
+        print(f"  shard {key}: planned {v['planned']['dyn_energy_uj']:.4f} uJ"
+              f" vs best uniform {best} {best_e:.4f} uJ")
+    hetero = meta["heterogeneous_sites"]
+    print(f"shard-heterogeneous sites: "
+          f"{', '.join(hetero) if hetero else 'none'}")
+    best = agg["uniform_best"]
+    if best is not None:
+        best_e = agg["uniform"][best]["dyn_energy_uj"]
+        planned = agg["planned"]["dyn_energy_uj"]
+        hetero_e = agg["planned_heterogeneous"]["dyn_energy_uj"]
+        print(f"aggregate: executed plan {planned:.4f} uJ, per-shard "
+              f"heterogeneous {hetero_e:.4f} uJ, best uniform ({best}) "
+              f"{best_e:.4f} uJ -> {1.0 - hetero_e / max(best_e, 1e-30):.2%} "
+              f"predicted saving")
+    print(f"grid plan saved to {path} (replay: serve --arch {args.arch}"
+          f"{' --smoke' if args.smoke else ''} --backend-plan {path} "
+          f"--grid {grid[0]},{grid[1]})")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("mode", nargs="?", default="serve",
@@ -371,16 +448,47 @@ def main() -> int:
     ap.add_argument("--bits", type=int, default=4, choices=[2, 4, 8])
     ap.add_argument("--unit-n", type=int, default=128)
     ap.add_argument("--units", type=int, default=64)
+    ap.add_argument("--grid", default=None, metavar="X,Y",
+                    help="tensor-parallel PE-array grid: 'plan' derives a "
+                         "per-shard heterogeneous GridPlan; execution modes "
+                         "shard every dense contraction under shard_map on "
+                         "an XxY device mesh (needs X*Y visible devices, "
+                         "e.g. XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
     args = ap.parse_args()
 
+    grid = backends_lib.parse_grid(args.grid) if args.grid else None
+    plan = None
+    if args.backend_plan and args.mode != "plan":
+        # Load up front: a GridPlan implies grid execution even without
+        # --grid, and the mesh below must match the plan's device needs.
+        plan = backends_lib.load_plan(args.backend_plan)
+        if isinstance(plan, backends_lib.GridPlan):
+            if grid is not None and grid != plan.grid:
+                print(f"error: --grid {grid} conflicts with the grid plan's "
+                      f"own grid {plan.grid}")
+                return 2
+            grid = plan.grid
+        elif grid is not None:
+            # shard a flat plan's sites across the requested grid
+            plan = backends_lib.GridPlan(units_x=grid[0], units_y=grid[1],
+                                         aggregate=plan, shards=())
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
     if cfg.frontend_stub:
         print(f"note: {args.arch} uses a frontend stub; serving raw backbone tokens")
-    mesh = single_device_mesh()
+    # Planning is analytic (no grid devices needed); execution with a grid
+    # runs the jitted steps on the grid mesh so the in-step shard_maps and
+    # the step shardings agree on one device set.
+    needs_grid_mesh = grid is not None and args.mode != "plan" \
+        and (args.execute_backend or args.backend_plan)
+    mesh = (make_grid_mesh(*grid) if needs_grid_mesh
+            else single_device_mesh())
     with mesh:
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
     if args.mode == "plan":
+        if grid is not None:
+            return run_grid_plan_mode(args, cfg, params, grid)
         return run_plan_mode(args, cfg, params)
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(
@@ -434,8 +542,12 @@ def main() -> int:
     # --- end-to-end execution on the chosen backend -------------------------
     if args.execute_backend:
         backend = backends_lib.resolve(args.execute_backend, bits=args.bits)
+        if grid is not None:
+            backend = backends_lib.as_grid(backend, *grid)
+        gtag = (f" on a {grid[0]}x{grid[1]} grid (shard_map, psum over k)"
+                if grid else "")
         print(f"\n=== executing model on {backend.name} "
-              f"({backend.bits}-bit int tiles) ===")
+              f"({backend.bits}-bit int tiles){gtag} ===")
         result = run_backend_execution(
             cfg, params, mesh, prompt, backend, args.tokens,
             unit_n=args.unit_n, num_units=args.units, stats=stats)
@@ -463,10 +575,12 @@ def main() -> int:
 
     # --- end-to-end execution on a per-site mixed-precision plan ------------
     if args.backend_plan:
-        plan = backends_lib.BackendPlan.load(args.backend_plan)
+        is_grid = isinstance(plan, backends_lib.GridPlan)
         distinct = plan.distinct_backends()
-        print(f"\n=== executing model on backend plan {args.backend_plan} "
-              f"({', '.join(f'{d}@{b}' for d, b in distinct)}) ===")
+        gtag = (f" on a {plan.units_x}x{plan.units_y} grid" if is_grid
+                else "")
+        print(f"\n=== executing model on backend plan {args.backend_plan}"
+              f"{gtag} ({', '.join(f'{d}@{b}' for d, b in distinct)}) ===")
         result = run_plan_execution(cfg, params, mesh, prompt, plan,
                                     args.tokens)
         qt = result["tokens"]
@@ -479,25 +593,39 @@ def main() -> int:
             design = tag.split("@")[0]
             exact = backends_lib.resolve(design).exact
             label = "bit-exact" if rel == 0.0 else f"relRMSE {rel:.2e}"
-            print(f"int GEMMs vs binary oracle on {tag}: {label}")
+            oracle = ("unsharded binary oracle" if is_grid
+                      else "binary oracle")
+            print(f"int GEMMs vs {oracle} on {tag}: {label}")
             if exact and rel != 0.0:
                 ok = False
         print(f"output drift vs float model (prefill logits): "
               f"relRMSE {result['drift']:.3f}, "
               f"top-1 agreement {result['top1_agreement']:.1%}")
         total = {"measured": 0.0, "dyn": 0.0, "dyn_floor": 0.0, "wc": 0.0}
-        for site, cyc in sorted(result["site_cycles"].items()):
+
+        def _check(label, cyc):
             in_bounds = (cyc["dyn_floor"] - 0.5 <= cyc["measured"]
                          <= cyc["wc"] + 0.5)
-            ok = ok and in_bounds
-            for key in total:
-                total[key] += cyc[key]
-            print(f"  {site:>24s} cycles: measured {cyc['measured']:.3e} in "
+            print(f"  {label:>30s} cycles: measured {cyc['measured']:.3e} in "
                   f"[floor {cyc['dyn_floor']:.3e}, wc {cyc['wc']:.3e}]: "
                   f"{in_bounds} (planned Eq.1 dyn {cyc['dyn']:.3e})")
-        print(f"per-decode-token cycle totals: measured {total['measured']:.3e}"
-              f" within [dyn floor {total['dyn_floor']:.3e}, "
-              f"wc {total['wc']:.3e}] (planned Eq.1 dyn {total['dyn']:.3e})")
+            return in_bounds
+
+        for site, cyc in sorted(result["site_cycles"].items()):
+            if result["grid"]:
+                for coord, shard_cyc in sorted(cyc.items()):
+                    ok = _check(f"{site} [{coord}]", shard_cyc) and ok
+                    for key in total:
+                        total[key] += shard_cyc[key]
+            else:
+                ok = _check(site, cyc) and ok
+                for key in total:
+                    total[key] += cyc[key]
+        scope = "per-shard " if result["grid"] else ""
+        print(f"per-decode-token {scope}cycle totals: measured "
+              f"{total['measured']:.3e} within [dyn floor "
+              f"{total['dyn_floor']:.3e}, wc {total['wc']:.3e}] "
+              f"(planned Eq.1 dyn {total['dyn']:.3e})")
         if not ok:
             print("WARNING: plan replay violated bit-exactness or cycle "
                   "bounds")
