@@ -22,7 +22,9 @@ acceptance properties hold, +1.0 per violation:
 * the per-shard plan is *mixed* (≥ 2 distinct (design, bits) across the
   shard assignments);
 * the per-shard heterogeneous planned energy ≤ the best uniform grid
-  assignment's energy (per-site, per-shard argmin over a superset).
+  assignment's energy (per-site, per-shard argmin over a superset);
+* the emitted grid plan lints clean under ``repro.analysis.plan_lint``
+  (each error finding adds +1.0; the verdict line lands in the report).
 """
 
 from __future__ import annotations
@@ -91,9 +93,10 @@ def grid(out_dir: str | None = None):
                              str(chain_energy), None))
 
     # --- part 2: per-shard heterogeneous grid plan -------------------------
+    site_list = planner_lib.discover_sites(cfg, params, batch=BATCH)
     gplan = planner_lib.build_grid_plan(
         cfg, params, grid=PLAN_GRID, batch=BATCH, unit_n=UNIT_N,
-        num_units=NUM_UNITS)
+        num_units=NUM_UNITS, sites=site_list)
     meta = gplan.metadata()
     agg = meta["totals"]["aggregate"]
     hetero = agg["planned_heterogeneous"]["dyn_energy_uj"]
@@ -112,10 +115,16 @@ def grid(out_dir: str | None = None):
         ("plan_heterogeneous_sites",
          ", ".join(meta["heterogeneous_sites"]) or "none", None),
     ]
+    from repro.analysis import findings as findings_lib
+    from repro.analysis import plan_lint
+    found = plan_lint.lint_plan(gplan,
+                                site_names=[s.name for s in site_list])
+    rows.append(("analysis", findings_lib.verdict_line(found), None))
     if len(shard_distinct) < 2:
         err += 1.0  # the per-shard assignment degenerated to uniform
     if best_name is None or hetero > best * (1 + 1e-9):
         err += 1.0  # the per-shard plan lost to a uniform grid assignment
+    err += float(len(findings_lib.errors(found)))  # plan must lint clean
 
     # --- report files -------------------------------------------------------
     os.makedirs(out_dir, exist_ok=True)

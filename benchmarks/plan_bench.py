@@ -11,7 +11,9 @@ Derived error (the ``benchmarks.run`` quality column) is 0.0 when the plan
 holds the acceptance properties, +1.0 for each violation:
 
 * the assignment is *mixed* — ≥ 2 distinct (design, bits) backends chosen;
-* the planned dynamic energy ≤ the best guard-feasible uniform baseline.
+* the planned dynamic energy ≤ the best guard-feasible uniform baseline;
+* the emitted plan lints clean under ``repro.analysis.plan_lint`` (each
+  error finding adds +1.0; the verdict line lands in the report rows).
 """
 
 from __future__ import annotations
@@ -39,8 +41,9 @@ def plan(out_dir: str | None = None):
     out_dir = out_dir or os.environ.get("PLAN_OUT", "reports")
     cfg = configs.get_smoke_config(ARCH)
     params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    sites = planner_lib.discover_sites(cfg, params, batch=BATCH)
     plan = planner_lib.build_plan(cfg, params, batch=BATCH, unit_n=UNIT_N,
-                                  num_units=NUM_UNITS)
+                                  num_units=NUM_UNITS, sites=sites)
 
     os.makedirs(out_dir, exist_ok=True)
     json_path = plan.save(os.path.join(out_dir, "plan.json"))
@@ -66,9 +69,14 @@ def plan(out_dir: str | None = None):
         ("json", json_path, None),
         ("markdown", md_path, None),
     ]
+    from repro.analysis import findings as findings_lib
+    from repro.analysis import plan_lint
+    found = plan_lint.lint_plan(plan, site_names=[s.name for s in sites])
+    rows.append(("analysis", findings_lib.verdict_line(found), None))
     err = 0.0
     if len(distinct) < 2:
         err += 1.0  # assignment degenerated to a uniform plan
     if best_name is None or planned > best * (1 + 1e-9):
         err += 1.0  # planner lost to a uniform baseline
+    err += float(len(findings_lib.errors(found)))  # plan must lint clean
     return rows, err

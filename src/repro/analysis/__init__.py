@@ -1,0 +1,42 @@
+"""Static analysis gating the backend/plan/grid stack.
+
+Three passes, one CLI (``python -m repro.analysis``, non-zero exit on
+error findings):
+
+* :mod:`repro.analysis.ranges` + :mod:`repro.analysis.jaxpr_scan` — the
+  numeric-range verifier: interval arithmetic over worst-case accumulator
+  magnitudes per design, applied to every GEMM site a zero-FLOP
+  ``jax.eval_shape`` trace discovers, cross-checked against the model
+  jaxpr's ``dot_general`` population.
+* :mod:`repro.analysis.plan_lint` — static checks on ``BackendPlan`` /
+  ``GridPlan`` JSON (unknown designs, dead/shadowed patterns, uncovered
+  sites, guard relaxations, overflow-hazardous assignments).
+* :mod:`repro.analysis.source_lint` — repo-specific AST rules (registry
+  mutation outside ``scoped_registry``, deprecated shim calls, unjitted
+  RNG in execute paths, float-accumulating exact-design kernels).
+
+This package ``__init__`` stays import-light: ``repro.backends.base``
+imports :mod:`repro.analysis.ranges` for its runtime envelope guard, so
+eagerly importing the lint passes here (which import ``repro.backends``)
+would create a cycle.  Submodules load lazily on attribute access.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.analysis.findings import (  # noqa: F401  (re-export)
+    ERROR, Finding, WARNING, errors, exit_code, verdict_line,
+)
+
+_SUBMODULES = ("findings", "ranges", "jaxpr_scan", "plan_lint",
+               "source_lint")
+
+__all__ = ["ERROR", "WARNING", "Finding", "errors", "exit_code",
+           "verdict_line", *_SUBMODULES]
+
+
+def __getattr__(name: str):
+    if name in _SUBMODULES:
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,283 @@
+"""Zero-FLOP GEMM discovery and jaxpr cross-check for the range verifier.
+
+Two independent views of a model's GEMM population are reconciled here:
+
+* the **planner's view** — ``repro.backends.record_sites()`` under a
+  ``jax.eval_shape`` trace (what ``models/common.dense`` would contract on
+  a backend), via ``repro.eval.planner.discover_sites``;
+* the **compiler's view** — every ``dot_general`` equation in the model's
+  jaxpr, collected by recursively walking sub-jaxprs (scan/pjit/cond
+  bodies) of a ``jax.make_jaxpr`` trace.
+
+Parameter provenance is tracked through shape-preserving ops, so each
+``dot_general`` that consumes a weight leaf directly can be attributed to
+its parameter path.  The cross-check then proves (a) every recorded site
+actually executes as a matching contraction, and (b) flags weight GEMMs
+the planner cannot see (e.g. a tied-embedding logits head) — those run on
+the float path whatever the plan says, so they are surfaced as warnings.
+
+Both traces are abstract: parameters come from
+``jax.eval_shape(init_params, ...)`` (``ShapeDtypeStruct`` leaves), so even
+the 671B registered config scans in about a second without materializing a
+single weight.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import ranges
+from repro.analysis.findings import ERROR, WARNING, Finding
+
+#: Primitives that carry their (sole) input's identity through unchanged in
+#: provenance terms — enough to follow a weight leaf into its dot_general.
+_PASS_THROUGH = frozenset({
+    "convert_element_type", "transpose", "reshape", "squeeze",
+    "expand_dims", "broadcast_in_dim", "slice", "rev", "copy",
+    "copy_p", "stop_gradient", "dynamic_slice",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class DotSite:
+    """One ``dot_general`` equation, normalized to GEMM terms."""
+
+    lhs_shape: tuple[int, ...]
+    rhs_shape: tuple[int, ...]
+    k: int                    # contracted size
+    n_out: int                # rhs free (non-batch) size
+    m: int                    # lhs free (non-batch) size
+    batch: int                # product of batch-dim sizes (0 dims -> 1)
+    param_path: str | None    # weight-leaf provenance, if either operand
+                              # traces back to a parameter leaf
+
+    @property
+    def weight_like(self) -> bool:
+        return self.param_path is not None
+
+
+def abstract_params(cfg):
+    """The model's parameter tree as ``ShapeDtypeStruct`` leaves (no FLOPs,
+    no memory — works for the full published configs)."""
+    from repro.models import model as model_lib
+    return jax.eval_shape(
+        lambda: model_lib.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def _forward_fn(cfg, batch: int, seq_len: int):
+    """The traceable forward closure and its example arguments."""
+    from repro.models import model as model_lib
+
+    if getattr(cfg, "frontend_stub", False):
+        embeds = jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                      jnp.float32)
+        return (lambda p, e: model_lib.forward(p, cfg, embeds=e)[0]), embeds
+    tokens = jnp.zeros((batch, seq_len), jnp.int32)
+    return (lambda p, t: model_lib.forward(p, cfg, t)[0]), tokens
+
+
+def _param_paths(params) -> list[str]:
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    return ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                     for p in path) for path, _ in flat]
+
+
+def _is_var(v) -> bool:
+    return not hasattr(v, "val")  # Literals carry .val; Vars do not
+
+
+def _dot_site(eqn, labels: dict) -> DotSite:
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lhs, rhs = eqn.invars[0].aval, eqn.invars[1].aval
+    k = math.prod(rhs.shape[d] for d in rc) if rc else 1
+    batch = math.prod(rhs.shape[d] for d in rb) if rb else 1
+    n_out = math.prod(s for d, s in enumerate(rhs.shape)
+                      if d not in rc and d not in rb)
+    m = math.prod(s for d, s in enumerate(lhs.shape)
+                  if d not in lc and d not in lb)
+    path = None
+    for v in eqn.invars[:2]:
+        if _is_var(v) and v in labels:
+            path = labels[v]
+            break
+    return DotSite(lhs_shape=tuple(lhs.shape), rhs_shape=tuple(rhs.shape),
+                   k=int(k), n_out=int(n_out), m=int(m), batch=int(batch),
+                   param_path=path)
+
+
+def _sub_jaxprs(eqn):
+    for val in eqn.params.values():
+        inner = getattr(val, "jaxpr", None)
+        if inner is not None and hasattr(inner, "eqns"):
+            yield inner
+        elif hasattr(val, "eqns"):
+            yield val
+        elif isinstance(val, (tuple, list)):
+            for item in val:
+                inner = getattr(item, "jaxpr", None)
+                if inner is not None and hasattr(inner, "eqns"):
+                    yield inner
+
+
+def _walk(jaxpr, labels: dict, out: list[DotSite]) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "dot_general":
+            out.append(_dot_site(eqn, labels))
+        elif name in _PASS_THROUGH and eqn.invars and eqn.outvars:
+            v = eqn.invars[0]
+            if _is_var(v) and v in labels:
+                labels[eqn.outvars[0]] = labels[v]
+        for inner in _sub_jaxprs(eqn):
+            # Positional invar mapping holds for pjit/closed_call/scan
+            # (consts-then-args order); bodies with a different calling
+            # convention are still walked, just without provenance.
+            inner_labels = {}
+            if len(inner.invars) == len(eqn.invars):
+                for outer_v, inner_v in zip(eqn.invars, inner.invars):
+                    if _is_var(outer_v) and outer_v in labels:
+                        inner_labels[inner_v] = labels[outer_v]
+            _walk(inner, inner_labels, out)
+
+
+def collect_dot_generals(cfg, params=None, *, batch: int = 1,
+                         seq_len: int = 8) -> list[DotSite]:
+    """Every ``dot_general`` in one forward step's jaxpr, with provenance."""
+    if params is None:
+        params = abstract_params(cfg)
+    fn, example = _forward_fn(cfg, batch, seq_len)
+    closed = jax.make_jaxpr(fn)(params, example)
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    paths = _param_paths(params)
+    labels = {v: paths[i] for i, v in enumerate(closed.jaxpr.invars[:n_leaves])
+              if _is_var(v)}
+    out: list[DotSite] = []
+    _walk(closed.jaxpr, labels, out)
+    return out
+
+
+def cross_check(sites, dots: Sequence[DotSite], *,
+                arch: str = "") -> list[Finding]:
+    """Reconcile recorded GEMM sites against the jaxpr population.
+
+    * a recorded site with no ``dot_general`` of matching (k, n_out) is an
+      error — the site contract claims a contraction the compiled model
+      never runs;
+    * a weight-consuming ``dot_general`` that matches no recorded site is
+      a warning — the planner cannot price or plan it, so it always runs
+      on the float path (tied-embedding logits heads land here).
+    """
+    prefix = f"{arch}/" if arch else ""
+    findings: list[Finding] = []
+    shapes = {(d.k, d.n_out) for d in dots}
+    for site in sites:
+        if (site.k, site.n_out) not in shapes:
+            findings.append(Finding(
+                pass_name="ranges", rule="site-not-in-jaxpr",
+                severity=ERROR, where=f"{prefix}{site.name}",
+                message=f"recorded GEMM site (k={site.k}, "
+                        f"n_out={site.n_out}) has no matching dot_general "
+                        f"in the model jaxpr"))
+    site_shapes = {(s.k, s.n_out) for s in sites}
+    seen: set[str] = set()
+    for dot in dots:
+        if not dot.weight_like or (dot.k, dot.n_out) in site_shapes:
+            continue
+        if dot.k == 1 and dot.n_out == 1:
+            continue  # degenerate rank-0 contraction (a scalar gate), not a GEMM
+        if dot.param_path in seen:
+            continue
+        seen.add(dot.param_path)
+        findings.append(Finding(
+            pass_name="ranges", rule="planner-invisible-gemm",
+            severity=WARNING, where=f"{prefix}{dot.param_path}",
+            message=f"weight leaf contracts as (k={dot.k}, "
+                    f"n_out={dot.n_out}) outside any dense site — the "
+                    f"planner cannot assign it a backend, so it always "
+                    f"runs on the float path"))
+    return findings
+
+
+def range_sweep(sites, *, designs: Sequence[str],
+                bits_candidates: Sequence[int],
+                grids: Sequence[tuple[int, int]] = ((1, 1),),
+                arch: str = "") -> tuple[list[Finding], int]:
+    """Prove every (site, design, bits, grid) point's accumulator safe.
+
+    For each discovered site, every candidate design x bit-width is checked
+    at the site's full contraction length and at each grid geometry's
+    per-shard split (K ceil-split over ``units_x`` — the padded shard K is
+    what ``GridBackend.execute`` actually contracts).  An individually
+    infeasible combination is a *warning* (the planner prunes it); a site
+    where **no** candidate fits any envelope is an error — nothing could
+    ever execute it exactly.
+
+    Returns ``(findings, points_checked)``.
+    """
+    prefix = f"{arch}/" if arch else ""
+    findings: list[Finding] = []
+    checked = 0
+    for site in sites:
+        feasible = 0
+        for design in designs:
+            for bits in bits_candidates:
+                for ux, uy in grids:
+                    k_shard = -(-site.k // ux)
+                    checked += 1
+                    where = f"{prefix}{site.name}"
+                    if (ux, uy) != (1, 1):
+                        where += f" [grid {ux}x{uy}]"
+                    f = ranges.check_gemm(design, bits, k_shard, where=where)
+                    if f is None:
+                        if (ux, uy) == grids[0]:
+                            feasible += 1
+                    elif f.rule == "acc-overflow":
+                        findings.append(dataclasses.replace(
+                            f, severity=WARNING,
+                            message=f.message + " (planner prunes this "
+                                    "candidate)"))
+                    else:
+                        findings.append(f)
+        if not feasible:
+            findings.append(Finding(
+                pass_name="ranges", rule="no-feasible-design",
+                severity=ERROR, where=f"{prefix}{site.name}",
+                message=f"no (design, bits) candidate among "
+                        f"{list(designs)} x {list(bits_candidates)} can "
+                        f"contract K={site.k} inside its accumulator "
+                        f"envelope"))
+    return findings, checked
+
+
+def check_model(cfg, *, arch: str = "",
+                designs: Sequence[str] = ("bgemm", "ugemm", "tugemm",
+                                          "tubgemm"),
+                bits_candidates: Sequence[int] = (2, 4, 8),
+                grids: Sequence[tuple[int, int]] = ((1, 1), (2, 2), (4, 1)),
+                batch: int = 1, seq_len: int = 8,
+                ) -> tuple[list[Finding], dict]:
+    """Run the full numeric-range pass for one model config.
+
+    Discovery, jaxpr cross-check, and the envelope sweep, all on abstract
+    parameters.  Returns ``(findings, stats)`` where stats summarizes the
+    coverage (sites, dot_generals, points checked).
+    """
+    from repro.eval import planner
+
+    params = abstract_params(cfg)
+    sites = planner.discover_sites(cfg, params, batch=batch,
+                                   seq_len=seq_len)
+    dots = collect_dot_generals(cfg, params, batch=batch, seq_len=seq_len)
+    findings = cross_check(sites, dots, arch=arch)
+    sweep, checked = range_sweep(sites, designs=designs,
+                                 bits_candidates=bits_candidates,
+                                 grids=grids, arch=arch)
+    findings.extend(sweep)
+    stats = {"arch": arch, "sites": len(sites), "dot_generals": len(dots),
+             "points_checked": checked}
+    return findings, stats

@@ -1,0 +1,207 @@
+"""Static lint for ``BackendPlan`` / ``GridPlan`` documents.
+
+A plan is a claim: "these (pattern -> design@bits) assignments are what the
+model should execute".  This pass checks the claim without running
+anything:
+
+* ``unknown-design`` / ``invalid-bits`` — the assignment names a design
+  outside the registry (+ kernel mirrors) or a bit-width the int8 code
+  container cannot hold;
+* ``shadowed-pattern`` / ``dead-pattern`` — fnmatch resolution semantics
+  (exact > most-literal glob > earliest) make the entry unreachable, either
+  intrinsically (a duplicate pattern) or against a concrete site inventory
+  (the entry matches sites but wins none of them / matches nothing);
+* ``unmatched-site`` — a site in the inventory no entry covers (it runs on
+  the float path by contract; usually intentional, hence a warning);
+* ``guard-relaxed`` — the planner shipped an assignment whose quantization
+  error exceeded the accuracy guard (every bit-width failed);
+* ``acc-overflow`` — the assignment's recorded contraction geometry leaves
+  the design's accumulator envelope (:mod:`repro.analysis.ranges`); for
+  grid plans, per-shard entries check their shard-local K and aggregate
+  entries check the geometry's padded K split.
+
+Site inventories come from the plan's own evidence by default (entries
+record ``k``/``n_out``), or from a model trace when the caller has one.
+"""
+
+from __future__ import annotations
+
+import fnmatch
+import pathlib
+from typing import Sequence
+
+from repro.analysis import ranges
+from repro.analysis.findings import ERROR, WARNING, Finding
+from repro.backends.grid import GridPlan, load_plan
+from repro.backends.plan import BackendPlan, SiteAssignment, _specificity
+from repro.core import gemm_sims
+
+#: Bit-widths the quantized int8 code container supports (vmax needs >= 2,
+#: vmax(8) = 127 is the container ceiling).
+VALID_BITS = range(2, 9)
+
+
+def _known_designs() -> set[str]:
+    from repro.backends.registry import KERNEL_SIBLINGS
+    return set(gemm_sims.DESIGNS) | set(KERNEL_SIBLINGS)
+
+
+def _entry_findings(entry: SiteAssignment, *, where: str,
+                    k_override: int | None = None) -> list[Finding]:
+    out: list[Finding] = []
+    if entry.design not in _known_designs():
+        out.append(Finding(
+            pass_name="plan-lint", rule="unknown-design", severity=ERROR,
+            where=where,
+            message=f"design {entry.design!r} is not a registered design "
+                    f"or kernel mirror ({sorted(_known_designs())})"))
+    if entry.bits not in VALID_BITS:
+        out.append(Finding(
+            pass_name="plan-lint", rule="invalid-bits", severity=ERROR,
+            where=where,
+            message=f"bits={entry.bits} outside the int8 code container "
+                    f"range [{VALID_BITS.start}, {VALID_BITS.stop - 1}]"))
+    if entry.guard_relaxed:
+        out.append(Finding(
+            pass_name="plan-lint", rule="guard-relaxed", severity=WARNING,
+            where=where,
+            message=f"assignment shipped with the accuracy guard relaxed "
+                    f"(rel_mse={entry.rel_mse:.4f}); quantization error "
+                    f"exceeded the planning threshold at every bit-width"))
+    k = entry.k if k_override is None else k_override
+    if k and entry.design in _known_designs() \
+            and entry.bits in VALID_BITS:
+        f = ranges.check_gemm(entry.design, entry.bits, int(k), where=where)
+        if f is not None:
+            out.append(f)
+    return out
+
+
+def _pattern_findings(plan: BackendPlan, *,
+                      site_names: Sequence[str] | None,
+                      where_prefix: str) -> list[Finding]:
+    out: list[Finding] = []
+    # Intrinsic shadowing: resolution is (specificity, earliest), so a
+    # later entry with a pattern another entry already states can never
+    # win any site the earlier one matches.
+    seen: dict[str, int] = {}
+    for i, entry in enumerate(plan.sites):
+        if entry.pattern in seen:
+            out.append(Finding(
+                pass_name="plan-lint", rule="shadowed-pattern",
+                severity=ERROR,
+                where=f"{where_prefix}sites[{i}] {entry.pattern!r}",
+                message=f"duplicate of sites[{seen[entry.pattern]}] — "
+                        f"resolution always prefers the earlier entry, so "
+                        f"this assignment ({entry.design}@{entry.bits}b) "
+                        f"is unreachable"))
+        else:
+            seen[entry.pattern] = i
+    if site_names is None:
+        return out
+    # Inventory-backed reachability: which entry wins each site?
+    wins: dict[int, list[str]] = {i: [] for i in range(len(plan.sites))}
+    matched: dict[str, bool] = {}
+    for name in site_names:
+        best, best_key = None, None
+        for i, entry in enumerate(plan.sites):
+            if not fnmatch.fnmatch(name, entry.pattern):
+                continue
+            key = (*_specificity(entry.pattern), -i)
+            if best_key is None or key > best_key:
+                best, best_key = i, key
+        matched[name] = best is not None
+        if best is not None:
+            wins[best].append(name)
+    for i, entry in enumerate(plan.sites):
+        if entry.pattern in seen and seen[entry.pattern] != i:
+            continue  # already reported as a duplicate
+        matches = [n for n in site_names
+                   if fnmatch.fnmatch(n, entry.pattern)]
+        if not matches:
+            out.append(Finding(
+                pass_name="plan-lint", rule="dead-pattern", severity=ERROR,
+                where=f"{where_prefix}sites[{i}] {entry.pattern!r}",
+                message="pattern matches no site in the model — stale "
+                        "entry or typo"))
+        elif not wins[i]:
+            losers = ", ".join(matches[:3])
+            out.append(Finding(
+                pass_name="plan-lint", rule="shadowed-pattern",
+                severity=ERROR,
+                where=f"{where_prefix}sites[{i}] {entry.pattern!r}",
+                message=f"every matching site (e.g. {losers}) resolves to "
+                        f"a more specific or earlier entry — this "
+                        f"assignment is unreachable"))
+    for name in site_names:
+        if not matched[name]:
+            out.append(Finding(
+                pass_name="plan-lint", rule="unmatched-site",
+                severity=WARNING, where=f"{where_prefix}{name}",
+                message="no plan entry matches this site — it runs on the "
+                        "float path"))
+    return out
+
+
+def lint_backend_plan(plan: BackendPlan, *,
+                      site_names: Sequence[str] | None = None,
+                      where_prefix: str = "",
+                      k_override: int | None = None) -> list[Finding]:
+    """All findings for one flat :class:`BackendPlan`."""
+    out: list[Finding] = []
+    for i, entry in enumerate(plan.sites):
+        where = (f"{where_prefix}sites[{i}] {entry.pattern!r} "
+                 f"-> {entry.design}@{entry.bits}b")
+        out.extend(_entry_findings(entry, where=where,
+                                   k_override=k_override))
+    out.extend(_pattern_findings(plan, site_names=site_names,
+                                 where_prefix=where_prefix))
+    return out
+
+
+def lint_grid_plan(plan: GridPlan, *,
+                   site_names: Sequence[str] | None = None) -> list[Finding]:
+    """Findings for a :class:`GridPlan`: per-shard plans check shard-local
+    contraction lengths (their entries record the slice dims); the
+    aggregate plan is checked at the geometry's padded K split, which is
+    what SPMD replay via ``GridBackend`` actually contracts per shard."""
+    out: list[Finding] = []
+    for key, shard_plan in plan.shards:
+        out.extend(lint_backend_plan(shard_plan, site_names=None,
+                                     where_prefix=f"shard {key}/"))
+    agg = plan.aggregate
+    for i, entry in enumerate(agg.sites):
+        where = (f"aggregate sites[{i}] {entry.pattern!r} "
+                 f"-> {entry.design}@{entry.bits}b "
+                 f"[grid {plan.units_x}x{plan.units_y}]")
+        k_shard = -(-int(entry.k) // plan.units_x) if entry.k else 0
+        out.extend(_entry_findings(entry, where=where, k_override=k_shard))
+    out.extend(_pattern_findings(agg, site_names=site_names,
+                                 where_prefix="aggregate "))
+    return out
+
+
+def lint_plan(plan, *, site_names: Sequence[str] | None = None
+              ) -> list[Finding]:
+    """Dispatch on plan flavour."""
+    if isinstance(plan, GridPlan):
+        return lint_grid_plan(plan, site_names=site_names)
+    if isinstance(plan, BackendPlan):
+        return lint_backend_plan(plan, site_names=site_names)
+    raise TypeError(f"expected BackendPlan or GridPlan, got {type(plan)!r}")
+
+
+def lint_plan_file(path, *, site_names: Sequence[str] | None = None
+                   ) -> list[Finding]:
+    """Load (schema-sniffing) and lint one plan JSON document."""
+    path = pathlib.Path(path)
+    try:
+        plan = load_plan(path)
+    except Exception as e:  # malformed JSON/schema is itself a finding
+        return [Finding(pass_name="plan-lint", rule="unloadable-plan",
+                        severity=ERROR, where=str(path),
+                        message=f"{type(e).__name__}: {e}")]
+    prefix = f"{path.name}: "
+    return [Finding(f.pass_name, f.rule, f.severity,
+                    f"{prefix}{f.where}", f.message)
+            for f in lint_plan(plan, site_names=site_names)]

@@ -1,0 +1,271 @@
+"""Interval arithmetic over per-design accumulator magnitudes.
+
+The paper's exactness claims are *envelope* claims: each design's result is
+bit-exact only while its accumulator register can represent the largest
+partial value the contraction can produce.  This module computes those
+worst-case (and sparsity-informed) magnitudes symbolically, so a (design,
+bits, K) point can be proved safe before anything executes:
+
+* ``bgemm`` / ``tugemm`` / ``tubgemm`` accumulate int32 partial sums whose
+  functional magnitude is bounded by ``K * Vmax(bits)^2``; tuGEMM's counter
+  bank additionally counts up to ``K * L^2`` pulses per output with
+  ``L = 2^(bits-1)`` slots (the slot-parallel contraction sums one {-1, 0,
+  1} increment per (slot_a, slot_b, k) triple), so its register bound is
+  the pulse count, which dominates the functional bound.
+* ``ugemm`` keeps its pulse counts in float32 (the BLAS-path trade
+  documented in ``gemm_sims.ugemm_stream``): counts are exact integers only
+  inside the fp32 exact-integer window, i.e. while ``L * K < 2^24`` with
+  ``L = 2^bits`` slots.
+
+Everything here is closed-form python arithmetic — no JAX — so the runtime
+guards in ``repro.backends`` can import it without cost and the property
+tests can brute-force-check it against the simulators.
+
+Pallas kernel mirrors (``tugemm_pallas``…) inherit their sibling's
+envelope: :func:`design_family` strips the ``_pallas`` suffix, mirroring
+``repro.backends.registry.KERNEL_SIBLINGS``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.analysis.findings import ERROR, Finding
+from repro.core.quantization import vmax
+
+INT32_MAX = 2**31 - 1
+#: Largest integer window in which every fp32 value is exact — uGEMM's
+#: float-held pulse counts are bit-exact only strictly below 2^24.
+FLOAT32_EXACT_MAX = 2**24 - 1
+
+_PALLAS_SUFFIX = "_pallas"
+
+#: Designs with a closed-form accumulator model (the paper's four units).
+FAMILIES = ("bgemm", "ugemm", "tugemm", "tubgemm")
+
+
+@dataclasses.dataclass(frozen=True)
+class Interval:
+    """A closed interval ``[lo, hi]`` with the arithmetic the bounds need."""
+
+    lo: float
+    hi: float
+
+    def __post_init__(self) -> None:
+        if self.lo > self.hi:
+            raise ValueError(f"empty interval: [{self.lo}, {self.hi}]")
+
+    @classmethod
+    def point(cls, v: float) -> "Interval":
+        return cls(v, v)
+
+    @classmethod
+    def symmetric(cls, mag: float) -> "Interval":
+        """``[-mag, +mag]`` — the value set of a signed magnitude bound."""
+        return cls(-mag, mag)
+
+    def __add__(self, other: "Interval") -> "Interval":
+        return Interval(self.lo + other.lo, self.hi + other.hi)
+
+    def __mul__(self, other: "Interval") -> "Interval":
+        corners = (self.lo * other.lo, self.lo * other.hi,
+                   self.hi * other.lo, self.hi * other.hi)
+        return Interval(min(corners), max(corners))
+
+    def scale(self, n: float) -> "Interval":
+        """n-fold sum of independent copies (n >= 0): ``[n*lo, n*hi]``."""
+        if n < 0:
+            raise ValueError("scale expects a non-negative repeat count")
+        return Interval(self.lo * n, self.hi * n)
+
+    def contains(self, value: float) -> bool:
+        return self.lo <= value <= self.hi
+
+    @property
+    def abs_max(self) -> float:
+        return max(abs(self.lo), abs(self.hi))
+
+
+def design_family(design: str) -> str:
+    """Canonical envelope family of a design name (mirrors inherit)."""
+    base = design[:-len(_PALLAS_SUFFIX)] if design.endswith(_PALLAS_SUFFIX) \
+        else design
+    return base
+
+
+def _effective_k(k: int, word_sparsity: float) -> int:
+    """Contraction terms that can be non-zero given a word-sparsity bound.
+
+    ``word_sparsity`` is the fraction of exactly-zero quantized words (the
+    planner's profiled ``stats.word``); a zero word contributes nothing to
+    any accumulator, so at most ``ceil(k * (1 - s))`` terms carry magnitude.
+    0.0 (the default) is the worst case.
+    """
+    if not 0.0 <= word_sparsity <= 1.0:
+        raise ValueError(f"word_sparsity must be in [0, 1], "
+                         f"got {word_sparsity}")
+    return min(k, math.ceil(k * (1.0 - word_sparsity)))
+
+
+def output_interval(design: str, bits: int, k: int, *,
+                    word_sparsity: float = 0.0) -> Interval:
+    """Interval containing the design's (M, N) output values.
+
+    For the exact designs the output *is* the int32 accumulator; for uGEMM
+    the estimate ``count * V^2/L <= |a||b|``-ish is still bounded by the
+    same functional product sum.  Built from first principles with interval
+    arithmetic: k-fold sum of the product of two ``[-V, +V]`` code
+    intervals.
+    """
+    family = design_family(design)
+    if family not in FAMILIES:
+        raise KeyError(f"no accumulator model for design {design!r} "
+                       f"(families: {FAMILIES})")
+    v = Interval.symmetric(vmax(bits))
+    return (v * v).scale(_effective_k(k, word_sparsity))
+
+
+def counter_interval(design: str, bits: int, k: int, *,
+                     word_sparsity: float = 0.0) -> Interval:
+    """Interval of the *register* each design actually accumulates in.
+
+    This is what capacity is checked against, and it can exceed the
+    functional output bound: tuGEMM's counter sums one signed pulse per
+    (slot_a, slot_b, k) triple — up to ``L^2`` per step, L = 2^(bits-1) —
+    and uGEMM counts up to ``L = 2^bits`` AND-pulses per step before
+    rescaling.  bgemm/tubgemm registers hold the functional partial sum
+    itself (tubGEMM's slot weights sum back to the operand magnitude).
+    """
+    family = design_family(design)
+    if family in ("bgemm", "tubgemm"):
+        return output_interval(design, bits, k, word_sparsity=word_sparsity)
+    if family == "tugemm":
+        per_step = Interval.symmetric(2 ** (bits - 1)) \
+            * Interval.symmetric(2 ** (bits - 1))
+        return per_step.scale(_effective_k(k, word_sparsity))
+    if family == "ugemm":
+        per_step = Interval.symmetric(2 ** bits)
+        return per_step.scale(_effective_k(k, word_sparsity))
+    raise KeyError(f"no accumulator model for design {design!r} "
+                   f"(families: {FAMILIES})")
+
+
+def capacity(design: str, bits: int) -> int:
+    """Largest accumulator magnitude the design represents exactly."""
+    if design_family(design) == "ugemm":
+        return FLOAT32_EXACT_MAX
+    return INT32_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class AccumulatorBound:
+    """The verdict for one (design, bits, K) point."""
+
+    design: str
+    bits: int
+    k: int
+    interval: Interval        # register interval (capacity domain)
+    output: Interval          # functional output interval
+    capacity: int
+    word_sparsity: float = 0.0
+
+    @property
+    def ok(self) -> bool:
+        return self.interval.abs_max <= self.capacity
+
+    @property
+    def headroom(self) -> float:
+        """capacity / |register| — > 1 means safe, with margin."""
+        mag = self.interval.abs_max
+        return math.inf if mag == 0 else self.capacity / mag
+
+    def describe(self) -> str:
+        kind = ("fp32 exact-int window" if design_family(self.design)
+                == "ugemm" else "int32 accumulator")
+        return (f"{self.design}@{self.bits}b K={self.k}: register magnitude "
+                f"<= {self.interval.abs_max:.0f} vs {kind} capacity "
+                f"{self.capacity} (headroom {self.headroom:.2f}x)")
+
+
+def accumulator_bound(design: str, bits: int, k: int, *,
+                      word_sparsity: float = 0.0) -> AccumulatorBound:
+    """Bound the accumulator of a (·, K) x (K, ·) contraction.
+
+    Raises ``KeyError`` for designs without an accumulator model — callers
+    linting user plans should catch it and emit an ``unknown-design``
+    finding instead.
+    """
+    if k < 0:
+        raise ValueError(f"contraction length must be >= 0, got k={k}")
+    return AccumulatorBound(
+        design=design, bits=bits, k=k,
+        interval=counter_interval(design, bits, k,
+                                  word_sparsity=word_sparsity),
+        output=output_interval(design, bits, k,
+                               word_sparsity=word_sparsity),
+        capacity=capacity(design, bits),
+        word_sparsity=word_sparsity)
+
+
+def max_safe_k(design: str, bits: int) -> int:
+    """Largest K for which ``accumulator_bound(design, bits, K).ok``.
+
+    Closed form: the register magnitude is ``K * u`` for a per-step unit
+    ``u`` (``Vmax^2``, ``L^2`` pulses, or ``L`` counts), so the envelope
+    edge is ``capacity // u``.  0 means no contraction length is safe at
+    this width (e.g. hypothetical ``ugemm`` above 24 bits).
+    """
+    per_step = counter_interval(design, bits, 1).abs_max
+    if per_step == 0:
+        return INT32_MAX
+    return int(capacity(design, bits) // per_step)
+
+
+def check_gemm(design: str, bits: int, k: int, *, where: str,
+               word_sparsity: float = 0.0) -> Finding | None:
+    """A ranges-pass finding if the point leaves its envelope, else None."""
+    try:
+        bound = accumulator_bound(design, bits, k,
+                                  word_sparsity=word_sparsity)
+    except KeyError:
+        return Finding(
+            pass_name="ranges", rule="unknown-design", severity=ERROR,
+            where=where,
+            message=f"design {design!r} has no accumulator model "
+                    f"(families: {', '.join(FAMILIES)})")
+    if bound.ok:
+        return None
+    return Finding(
+        pass_name="ranges", rule="acc-overflow", severity=ERROR,
+        where=where,
+        message=f"{bound.describe()} — exceeds envelope; largest safe K "
+                f"is {max_safe_k(design, bits)}")
+
+
+def assert_within_envelope(design: str, bits: int, k: int, *,
+                           where: str = "") -> None:
+    """Runtime guard used by ``GemmBackend.execute`` and the grid path.
+
+    Raises ``ValueError`` with an actionable message when the contraction
+    would leave the design's validated accumulator envelope.  Unknown
+    designs pass (custom registrations carry their own numerics contract).
+    """
+    try:
+        bound = accumulator_bound(design, bits, k)
+    except KeyError:
+        return
+    if bound.ok:
+        return
+    site = f" at {where}" if where else ""
+    family = design_family(design)
+    fix = (f"split the contraction (e.g. a GridBackend with units_x >= "
+           f"{math.ceil(k / max(max_safe_k(design, bits), 1))}) or use an "
+           f"int32-accumulating design"
+           if family == "ugemm" else
+           "shard the contraction over a GridBackend or lower the "
+           "bit-width")
+    raise ValueError(
+        f"{design}@{bits}b cannot run a K={k} contraction{site}: "
+        f"{bound.describe()}; results would silently stop being "
+        f"bit-exact (largest safe K is {max_safe_k(design, bits)}) — {fix}")

@@ -1,0 +1,315 @@
+"""Repo-specific AST lint rules for the backend stack's contracts.
+
+Four rules, each encoding an invariant the rest of the codebase relies on
+but Python cannot enforce:
+
+* ``registry-mutation`` — the ``gemm_sims`` design registry may only be
+  mutated through ``scoped_registry`` / ``kernel_backends`` scopes (or in
+  ``core/gemm_sims.py`` itself, which registers the built-ins).  Unscoped
+  mutation leaks designs across tests and benchmark snapshots.
+* ``deprecated-shim`` — the string-dispatch shims (``gemm_sims.gemm`` /
+  ``stream_gemm`` / ``gemm_batched`` and
+  ``kernels.backends.register_kernel_backends``) are for tests and
+  back-compat only; production paths construct backends with
+  ``repro.backends.resolve``.
+* ``unjitted-rng`` — ``jax.random`` calls in the execute layer
+  (``repro/backends``, ``repro/kernels``) outside a jitted function force
+  host synchronization per call on the hot path.
+* ``float-accumulation`` — a contraction inside an exact-design kernel
+  (``bgemm*``/``tugemm*``/``tubgemm*``/``tu_gemm*``/``tub_gemm*``/
+  ``quant_gemm*``) must pass an integer ``preferred_element_type``;
+  float32 accumulation silently re-introduces the rounding the designs'
+  exactness claim excludes (uGEMM's float-count path is the documented
+  exception and is not an exact design).
+
+Suppression: a ``# analysis: allow-<rule>`` comment on the flagged line or
+on the enclosing ``def`` line disables that rule there (used where a rule's
+precondition is satisfied non-lexically, e.g. the registration helper that
+is only called under a scope).  Test trees are skipped entirely.
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Iterable
+
+from repro.analysis.findings import ERROR, Finding
+
+RULES = ("registry-mutation", "deprecated-shim", "unjitted-rng",
+         "float-accumulation")
+
+_PRAGMA_RE = re.compile(r"#\s*analysis:\s*allow-([a-z0-9-]+)")
+
+#: Deprecated string-dispatch surface: module -> function names.
+DEPRECATED_SHIMS = {
+    "repro.core.gemm_sims": {"gemm", "stream_gemm", "gemm_batched"},
+    "repro.kernels.backends": {"register_kernel_backends"},
+}
+_REGISTRY_MODULE = "repro.core.gemm_sims"
+_REGISTRY_MUTATORS = {"register_design", "registry_restore"}
+_SCOPE_MANAGERS = {"scoped_registry", "kernel_backends"}
+
+_EXECUTE_PATH_PARTS = ("repro/backends/", "repro/kernels/")
+_EXACT_KERNEL_PREFIXES = ("bgemm", "tugemm", "tubgemm", "tu_gemm",
+                          "tub_gemm", "quant_gemm")
+_CONTRACTION_FUNCS = {"einsum", "matmul", "dot", "dot_general", "tensordot"}
+_INT_DTYPES = {"int8", "int16", "int32", "int64"}
+
+#: Files whose job is to define the things the rules police.
+_DEFINING_FILES = {
+    "registry-mutation": ("src/repro/core/gemm_sims.py",),
+    "deprecated-shim": ("src/repro/core/gemm_sims.py",
+                        "src/repro/kernels/backends.py"),
+}
+
+
+def _dotted(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chains as a dotted string (None otherwise)."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _mentions_jit(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "jit":
+            return True
+    return False
+
+
+class _FileLint(ast.NodeVisitor):
+    def __init__(self, path: pathlib.Path, rel: str, source: str):
+        self.rel = rel
+        self.findings: list[Finding] = []
+        self.pragmas: dict[int, set[str]] = {}
+        for i, line in enumerate(source.splitlines(), start=1):
+            for m in _PRAGMA_RE.finditer(line):
+                self.pragmas.setdefault(i, set()).add(m.group(1))
+        # import resolution: alias -> module path, name -> (module, attr)
+        self.module_alias: dict[str, str] = {}
+        self.from_import: dict[str, tuple[str, str]] = {}
+        self.func_stack: list[ast.AST] = []
+        self.scope_with_depth = 0  # inside `with ...scoped_registry():`
+        self.in_execute_path = any(p in rel for p in _EXECUTE_PATH_PARTS)
+
+    # -- plumbing ---------------------------------------------------------
+    def _allowed(self, rule: str, line: int) -> bool:
+        if rule in self.pragmas.get(line, ()):
+            return True
+        return any(rule in self.pragmas.get(f.lineno, ())
+                   for f in self.func_stack)
+
+    def _flag(self, rule: str, node: ast.AST, message: str) -> None:
+        if self._allowed(rule, node.lineno):
+            return
+        self.findings.append(Finding(
+            pass_name="source-lint", rule=rule, severity=ERROR,
+            where=f"{self.rel}:{node.lineno}", message=message))
+
+    def _resolve(self, chain: str) -> str:
+        """Expand the chain's leading alias to its imported module path."""
+        head, _, rest = chain.partition(".")
+        base = self.module_alias.get(head)
+        if base is not None:
+            return f"{base}.{rest}" if rest else base
+        return chain
+
+    # -- imports ----------------------------------------------------------
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            if alias.asname:
+                self.module_alias[alias.asname] = alias.name
+            else:
+                top = alias.name.partition(".")[0]
+                self.module_alias.setdefault(top, top)
+        self.generic_visit(node)
+
+    def visit_ImportFrom(self, node: ast.ImportFrom) -> None:
+        mod = node.module or ""
+        for alias in node.names:
+            bound = alias.asname or alias.name
+            self.from_import[bound] = (mod, alias.name)
+            self.module_alias[bound] = f"{mod}.{alias.name}"
+        self.generic_visit(node)
+
+    # -- structure --------------------------------------------------------
+    def _visit_func(self, node) -> None:
+        self.func_stack.append(node)
+        self.generic_visit(node)
+        self.func_stack.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    def visit_With(self, node: ast.With) -> None:
+        scoped = any(
+            isinstance(item.context_expr, ast.Call)
+            and (_dotted(item.context_expr.func) or "").rpartition(".")[2]
+            in _SCOPE_MANAGERS
+            for item in node.items)
+        self.scope_with_depth += scoped
+        self.generic_visit(node)
+        self.scope_with_depth -= scoped
+
+    # -- the rules --------------------------------------------------------
+    def _call_target(self, node: ast.Call) -> tuple[str, str] | None:
+        """(module, function) a call resolves to, best-effort."""
+        if isinstance(node.func, ast.Name):
+            hit = self.from_import.get(node.func.id)
+            if hit:
+                return hit
+            return None
+        chain = _dotted(node.func)
+        if chain is None:
+            return None
+        full = self._resolve(chain)
+        mod, _, fn = full.rpartition(".")
+        return (mod, fn) if mod else None
+
+    def visit_Call(self, node: ast.Call) -> None:
+        target = self._call_target(node)
+        if target is not None:
+            mod, fn = target
+            if mod in DEPRECATED_SHIMS and fn in DEPRECATED_SHIMS[mod] \
+                    and not self._exempt("deprecated-shim"):
+                self._flag(
+                    "deprecated-shim", node,
+                    f"call to deprecated {mod}.{fn}; construct backends "
+                    f"with repro.backends.resolve instead (migration "
+                    f"table in docs/BACKENDS.md)")
+            if mod == _REGISTRY_MODULE and fn in _REGISTRY_MUTATORS \
+                    and not self.scope_with_depth \
+                    and not self._exempt("registry-mutation"):
+                self._flag(
+                    "registry-mutation", node,
+                    f"{fn} mutates the global design registry outside a "
+                    f"scoped_registry/kernel_backends scope — leaked "
+                    f"registrations outlive the caller")
+        if self.in_execute_path:
+            chain = _dotted(node.func) or ""
+            full = self._resolve(chain)
+            if full.startswith("jax.random.") and not self._in_jitted():
+                self._flag(
+                    "unjitted-rng", node,
+                    f"{full} on the execute path outside a jitted "
+                    f"function — host-synchronizing RNG per call")
+        self._check_accumulation(node)
+        self.generic_visit(node)
+
+    def _exempt(self, rule: str) -> bool:
+        return self.rel in _DEFINING_FILES.get(rule, ())
+
+    def _in_jitted(self) -> bool:
+        return any(_mentions_jit(dec)
+                   for f in self.func_stack
+                   for dec in getattr(f, "decorator_list", ()))
+
+    def _in_exact_kernel(self) -> str | None:
+        for f in reversed(self.func_stack):
+            name = getattr(f, "name", "")
+            if name.startswith(_EXACT_KERNEL_PREFIXES):
+                return name
+        return None
+
+    def _check_accumulation(self, node: ast.Call) -> None:
+        chain = _dotted(node.func) or ""
+        if chain.rpartition(".")[2] not in _CONTRACTION_FUNCS:
+            return
+        kernel = self._in_exact_kernel()
+        if kernel is None:
+            return
+        for kw in node.keywords:
+            if kw.arg == "preferred_element_type":
+                dtype = (_dotted(kw.value) or "").rpartition(".")[2]
+                if dtype in _INT_DTYPES:
+                    return
+                break
+        self._flag(
+            "float-accumulation", node,
+            f"contraction in exact-design kernel {kernel!r} without an "
+            f"integer preferred_element_type — partial sums would "
+            f"accumulate in float, voiding the bit-exactness claim")
+
+    def _registry_store(self, node: ast.AST) -> None:
+        chain = _dotted(node) or (node.id if isinstance(node, ast.Name)
+                                  else "")
+        if isinstance(node, ast.Subscript):
+            chain = _dotted(node.value) or ""
+        if self._resolve(chain).rpartition(".")[2] == "_REGISTRY" \
+                and not self.scope_with_depth \
+                and not self._exempt("registry-mutation"):
+            self._flag(
+                "registry-mutation", node,
+                "direct write to gemm_sims._REGISTRY — use "
+                "register_design under a scoped_registry scope")
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for tgt in node.targets:
+            self._registry_store(tgt)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._registry_store(node.target)
+        self.generic_visit(node)
+
+    def visit_Delete(self, node: ast.Delete) -> None:
+        for tgt in node.targets:
+            self._registry_store(tgt)
+        self.generic_visit(node)
+
+
+def lint_source(source: str, *, rel: str = "<memory>") -> list[Finding]:
+    """Lint one file's text (unit-test entry point)."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding(pass_name="source-lint", rule="syntax-error",
+                        severity=ERROR, where=f"{rel}:{e.lineno or 0}",
+                        message=str(e))]
+    lint = _FileLint(pathlib.Path(rel), rel, source)
+    lint.visit(tree)
+    return lint.findings
+
+
+def _is_test_path(rel: str) -> bool:
+    parts = pathlib.PurePosixPath(rel).parts
+    return any(p in ("tests", "test") or p.startswith("test_")
+               for p in parts)
+
+
+def iter_python_files(root: pathlib.Path,
+                      subdirs: Iterable[str]) -> Iterable[pathlib.Path]:
+    for sub in subdirs:
+        base = root / sub
+        if base.is_file() and base.suffix == ".py":
+            yield base
+            continue
+        if not base.is_dir():
+            continue
+        for p in sorted(base.rglob("*.py")):
+            if "__pycache__" in p.parts:
+                continue
+            yield p
+
+
+def lint_repo(root, subdirs: Iterable[str] = ("src", "benchmarks",
+                                              "examples", "tools")
+              ) -> list[Finding]:
+    """Lint every non-test python file under the given repo subtrees."""
+    root = pathlib.Path(root)
+    findings: list[Finding] = []
+    for path in iter_python_files(root, subdirs):
+        rel = path.relative_to(root).as_posix()
+        if _is_test_path(rel):
+            continue
+        findings.extend(lint_source(path.read_text(), rel=rel))
+    return findings

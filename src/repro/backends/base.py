@@ -28,6 +28,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import ranges
 from repro.core import gemm_sims
 
 __all__ = ["GemmBackend"]
@@ -79,7 +80,13 @@ class GemmBackend:
         (the weight-stationary serving case).  Returns (…, M, N) — int32 for
         exact designs, float32 estimate for stochastic uGEMM.  Traceable:
         safe to call under ``jax.jit`` / ``jax.vmap``.
+
+        Raises ``ValueError`` when the contraction length leaves the
+        design's validated accumulator envelope (uGEMM's fp32 exact-count
+        window ``L*K < 2^24``, int32 partial sums for the exact designs)
+        — shapes are static, so the guard costs nothing under tracing.
         """
+        self._guard_envelope(a.shape[-1])
         if a.ndim == 2:
             return self.spec.exact_fn(a, b, self.bits)
         if a.ndim != 3:
@@ -92,9 +99,16 @@ class GemmBackend:
         """Cycle-faithful simulation (or kernel run): ``(out, cycles)``.
 
         ``cycles`` equals :meth:`cycles` of the contraction length — the
-        simulated schedules are worst-case.
+        simulated schedules are worst-case.  Same accumulator-envelope
+        guard as :meth:`execute` (the streamed registers are the model).
         """
+        self._guard_envelope(a.shape[-1])
         return self.spec.stream_fn(a, b, self.bits)
+
+    def _guard_envelope(self, k: int) -> None:
+        """Static numeric-safety check (see ``repro.analysis.ranges``)."""
+        ranges.assert_within_envelope(self.pricing_design, self.bits,
+                                      int(k), where=f"backend {self.name}")
 
     # -- cost ---------------------------------------------------------------
 

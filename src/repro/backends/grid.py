@@ -206,6 +206,10 @@ class GridBackend(GemmBackend):
                 f"execute wants (M, K) or (B, M, K) operands, got {a.shape}")
         x_parts, y_parts = self.units_x, self.units_y
         k, n = a.shape[1], b.shape[1]
+        # Envelope guard at the *shard-local* contraction length: each node
+        # accumulates over its ceil(K / units_x) padded rows, so K-splitting
+        # is exactly what buys headroom back (see repro.analysis.ranges).
+        self._guard_envelope(self.shard_common_dim(k))
         kp = -(-k // x_parts) * x_parts
         n_pad = -(-n // y_parts) * y_parts
         ap = jnp.pad(a, ((0, 0), (0, kp - k)))

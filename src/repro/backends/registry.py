@@ -72,6 +72,28 @@ def mirror_design_spec(name: str, *, block=None,
         stream_fn=lambda a, b, bits, _fn=fn: _fn(a, b, bits=bits, **kw))
 
 
+def _check_envelope_nonempty(name: str, bits: int) -> None:
+    """Reject (design, bits) points whose accumulator envelope is empty.
+
+    ``repro.analysis.ranges`` proves per-K safety at execute time; here we
+    catch the degenerate widths where *no* contraction length is safe (e.g.
+    a hypothetical ``ugemm`` at 24+ bits, whose 2^bits-slot counts already
+    exceed the fp32 exact-integer window at K=1) at construction, where the
+    error is cheapest to act on.  Designs without an accumulator model
+    (custom registrations) pass — their numerics contract is their own.
+    """
+    from repro.analysis import ranges
+    try:
+        safe_k = ranges.max_safe_k(KERNEL_SIBLINGS.get(name, name), bits)
+    except KeyError:
+        return
+    if safe_k < 1:
+        raise ValueError(
+            f"{name}@{bits}b has an empty accumulator envelope: even a K=1 "
+            f"contraction exceeds its register capacity "
+            f"(see repro.analysis.ranges.max_safe_k) — lower bits")
+
+
 def resolve(spec: str | GemmBackend, *, bits: int | None = None,
             block=None, interpret: bool | None = None) -> GemmBackend:
     """Construct (or pass through) a :class:`GemmBackend`.
@@ -93,6 +115,7 @@ def resolve(spec: str | GemmBackend, *, bits: int | None = None,
                                       else interpret))
         if bits is not None and int(bits) != backend.bits:
             backend = dataclasses.replace(backend, bits=int(bits))
+            _check_envelope_nonempty(backend.name, backend.bits)
         return backend
 
     name = str(spec)
@@ -111,6 +134,7 @@ def resolve(spec: str | GemmBackend, *, bits: int | None = None,
     else:
         raise ValueError(
             f"unknown design {name!r}; resolvable backends: {available()}")
+    _check_envelope_nonempty(name, bits)
     return GemmBackend(
         name=name, bits=bits, exact=dspec.exact,
         has_synthesis_data=name in paper_gemm.DESIGNS,

@@ -251,6 +251,40 @@ def use_backend(spec: str | GemmBackend, *, bits: int | None = None,
         yield execution
 
 
+def _validate_plan_envelopes(plan, grid: tuple[int, int] | None) -> None:
+    """Fail fast on assignments whose evidence leaves the safe envelope.
+
+    Entries record the contraction length they were planned for (``k``;
+    shard entries record their slice, aggregate grid entries the full K).
+    Executing outside the envelope would raise mid-trace anyway (the
+    backend guard); checking here turns that into an immediate, plan-level
+    error naming the offending entry.  Entries without geometry evidence
+    (hand-written pattern-only plans) are skipped — the execute guard
+    still covers them.
+    """
+    from repro.analysis import ranges
+    from repro.backends.grid import GridPlan
+
+    def check(entries, units_x: int, label: str) -> None:
+        for entry in entries:
+            if not entry.k:
+                continue
+            k_local = -(-int(entry.k) // units_x)
+            try:
+                ranges.assert_within_envelope(
+                    entry.design, entry.bits, k_local,
+                    where=f"{label} entry {entry.pattern!r}")
+            except KeyError:
+                continue
+
+    if isinstance(plan, GridPlan):
+        check(plan.aggregate.sites, plan.units_x, "aggregate plan")
+        for key, shard_plan in plan.shards:
+            check(shard_plan.sites, 1, f"shard {key} plan")
+    else:
+        check(plan.sites, grid[0] if grid else 1, "plan")
+
+
 @contextlib.contextmanager
 def use_plan(plan, *, grid=None):
     """Execute every ``dense`` contraction on the site's planned backend.
@@ -270,6 +304,11 @@ def use_plan(plan, *, grid=None):
     Yields a :class:`PlanExecution` whose ``.calls`` lists every contracted
     site with the backend it actually ran on.  Nests with
     :func:`use_backend` (innermost scope wins) and unwinds on exceptions.
+
+    Entering the scope statically validates the plan's recorded contraction
+    geometry against each assignment's accumulator envelope
+    (``repro.analysis.ranges``) — an overflow-hazardous plan fails here,
+    before any weight is quantized or any GEMM traced.
     """
     from repro.backends.grid import GridPlan, load_plan, parse_grid
     from repro.backends.plan import BackendPlan
@@ -277,6 +316,7 @@ def use_plan(plan, *, grid=None):
         plan = load_plan(plan)
     if grid is not None:
         grid = parse_grid(grid)
+    _validate_plan_envelopes(plan, grid)
     if isinstance(plan, GridPlan):
         if grid is not None and grid != plan.grid:
             raise ValueError(f"use_plan(grid={grid}) conflicts with the "

@@ -17,9 +17,14 @@ per-site assignment:
    accuracy-guard statistic).
 3. **Price** every (site, design, bits) candidate on the ``core.ppa``
    DLA tiling with Eq. 1 sparsity-scaled dynamic cycles instead of worst
-   case, drop candidates whose quantization error violates the guard, and
-   pick the per-site argmin of the objective.
-4. **Emit** a typed :class:`repro.backends.plan.BackendPlan` — frozen
+   case, drop candidates whose quantization error violates the guard —
+   and, first, candidates whose accumulator envelope the site's
+   contraction length provably leaves (``repro.analysis.ranges``): an
+   overflow-hazardous (design, bits) is never priced, never picked, and
+   never a uniform baseline, and the pruning evidence ships in the plan's
+   ``range_pruned`` meta block.
+4. **Pick** the per-site argmin of the objective.
+5. **Emit** a typed :class:`repro.backends.plan.BackendPlan` — frozen
    site-pattern → (design, bits) entries with the predicted energy/latency
    and guard evidence — which ``repro.backends.use_plan`` executes and
    ``launch/serve.py --backend-plan`` replays.
@@ -40,6 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import ranges as ranges_lib
 from repro.backends import grid as grid_lib
 from repro.backends import runtime as runtime_lib
 from repro.backends.plan import BackendPlan, SiteAssignment
@@ -241,22 +247,53 @@ def price_site(design: str, bits: int, *, m: int, k: int, n_out: int,
     }
 
 
+def prune_infeasible(site_name: str, k: int,
+                     designs: Sequence[str],
+                     bits_candidates: Sequence[int],
+                     pruned: list | None) -> set[tuple[str, int]]:
+    """(design, bits) pairs whose accumulator envelope ``k`` provably
+    leaves (``repro.analysis.ranges``) — the planner never prices, picks,
+    or baselines them.  Evidence is appended to ``pruned`` (the plan's
+    ``range_pruned`` meta block) when a list is given."""
+    out: set[tuple[str, int]] = set()
+    for design in designs:
+        for bits in bits_candidates:
+            finding = ranges_lib.check_gemm(design, bits, int(k),
+                                            where=site_name)
+            if finding is not None:
+                out.add((design, bits))
+                if pruned is not None:
+                    pruned.append({
+                        "site": site_name, "design": design, "bits": bits,
+                        "k": int(k),
+                        "max_safe_k": ranges_lib.max_safe_k(design, bits),
+                        "reason": finding.message})
+    return out
+
+
 def site_candidates(site: GemmSite, *,
                     bits_candidates: Sequence[int] = DEFAULT_BITS_CANDIDATES,
                     designs: Sequence[str] = DEFAULT_DESIGNS,
                     max_rel_mse: float = DEFAULT_MAX_REL_MSE,
                     unit_n: int = 64, num_units: int = 64,
-                    block: int = 32) -> list[Candidate]:
-    """Profile and price every (design, bits) candidate for one site.
+                    block: int = 32,
+                    pruned: list | None = None) -> list[Candidate]:
+    """Profile and price every feasible (design, bits) candidate for one
+    site.
 
-    The site's stacked weight matrix is profiled per the paper's convention
-    (per-tensor quantization grid, ``block``×``block`` maxima for the Eq. 1
-    statistic); the guard statistic is :func:`quantization_rel_mse` at each
-    bit-width.  ``guard_ok`` is False where ``rel_mse > max_rel_mse``.
+    Candidates whose accumulator envelope the site's contraction length
+    leaves are pruned *before* pricing (see :func:`prune_infeasible`;
+    evidence lands in ``pruned`` when given).  The site's stacked weight
+    matrix is profiled per the paper's convention (per-tensor quantization
+    grid, ``block``×``block`` maxima for the Eq. 1 statistic); the guard
+    statistic is :func:`quantization_rel_mse` at each bit-width.
+    ``guard_ok`` is False where ``rel_mse > max_rel_mse``.
 
     The weight is materialized once for the call and released with it (the
     streaming contract — see :class:`GemmSite`).
     """
+    infeasible = prune_infeasible(site.name, site.k, designs,
+                                  bits_candidates, pruned)
     weight = jnp.asarray(site.weight_matrix())
     out: list[Candidate] = []
     for bits in bits_candidates:
@@ -264,6 +301,8 @@ def site_candidates(site: GemmSite, *,
         rel_mse = quantization_rel_mse(weight, bits)
         guard_ok = rel_mse <= max_rel_mse
         for design in designs:
+            if (design, bits) in infeasible:
+                continue
             priced = price_site(design, bits, m=site.m, k=site.k,
                                 n_out=site.n_out, count=site.count,
                                 bit_sparsity=stats.bit_blockmax,
@@ -319,14 +358,25 @@ def build_plan(cfg, params, *, batch: int = 1,
         raise ValueError("model exposes no dense GEMM sites to plan")
 
     entries: list[SiteAssignment] = []
+    range_pruned: list[dict] = []
     uniform: dict[tuple[str, int], dict[str, float]] = {
         (d, b): {"dyn_energy_uj": 0.0, "dyn_latency_us": 0.0,
                  "wc_energy_uj": 0.0, "wc_latency_us": 0.0, "feasible": True}
         for d in designs for b in bits_candidates}
     for site in sites:
+        n_pruned = len(range_pruned)
         cands = site_candidates(site, bits_candidates=bits_candidates,
                                 designs=designs, max_rel_mse=max_rel_mse,
-                                unit_n=unit_n, num_units=num_units)
+                                unit_n=unit_n, num_units=num_units,
+                                pruned=range_pruned)
+        for rec in range_pruned[n_pruned:]:
+            uniform[(rec["design"], rec["bits"])]["feasible"] = False
+        if not cands:
+            raise ValueError(
+                f"site {site.name!r}: no (design, bits) candidate among "
+                f"{list(designs)} x {list(bits_candidates)} keeps a K="
+                f"{site.k} contraction inside its accumulator envelope "
+                f"(see repro.analysis.ranges)")
         best, relaxed = _pick(cands, objective)
         entries.append(SiteAssignment(
             pattern=site.name, design=best.design, bits=best.bits,
@@ -360,6 +410,10 @@ def build_plan(cfg, params, *, batch: int = 1,
         "unit_n": unit_n,
         "num_units": num_units,
         "batch": batch,
+        # Numeric-safety evidence: every pruned (site, design, bits) with
+        # its envelope bound.  Always present — an empty list is the
+        # verifier's proof that no candidate was overflow-hazardous.
+        "range_pruned": range_pruned,
         "totals": {
             "planned": planned,
             "uniform": {name: {k: v for k, v in tot.items()
@@ -466,6 +520,7 @@ def build_grid_plan(cfg, params, *, grid=(2, 2), batch: int = 1,
     agg_entries: list[SiteAssignment] = []
     agg_uniform = {(d, b): {**_zero_totals(), "feasible": True}
                    for d in designs for b in bits_candidates}
+    range_pruned: list[dict] = []
 
     for site in sites:
         weight = site.weight_matrix()          # streamed: one site at a time
@@ -476,6 +531,22 @@ def build_grid_plan(cfg, params, *, grid=(2, 2), batch: int = 1,
                       for b in bits_candidates}
         ks_pad = -(-site.k // units_x)
         ns_pad = -(-site.n_out // units_y)
+        # Envelope pruning at the *padded shard* contraction length — what
+        # each grid node actually accumulates over.  Infeasible pairs are
+        # never priced for any shard, the aggregate, or a uniform baseline.
+        infeasible = prune_infeasible(site.name, ks_pad, designs,
+                                      bits_candidates, range_pruned)
+        for pair in infeasible:
+            agg_uniform[pair]["feasible"] = False
+            for skey in shard_keys:
+                shard_uniform[skey][pair]["feasible"] = False
+        if len(infeasible) == len(designs) * len(bits_candidates):
+            raise ValueError(
+                f"site {site.name!r}: no (design, bits) candidate among "
+                f"{list(designs)} x {list(bits_candidates)} keeps the "
+                f"per-shard K={ks_pad} contraction (grid {units_x}x"
+                f"{units_y}) inside its accumulator envelope "
+                f"(see repro.analysis.ranges)")
         agg_costs: dict[tuple[str, int], dict[str, float]] = {}
 
         def _fold_agg(priced: dict[str, float], design: str,
@@ -510,6 +581,8 @@ def build_grid_plan(cfg, params, *, grid=(2, 2), batch: int = 1,
                 stats = shard_stats[bits]
                 guard_ok = full_mse[bits] <= max_rel_mse
                 for design in designs:
+                    if (design, bits) in infeasible:
+                        continue
                     node = ppa.DLAModel(design=design, bits=bits, n=unit_n,
                                         num_units=num_units)
                     gdla = ppa.GridDLAModel(
@@ -566,6 +639,9 @@ def build_grid_plan(cfg, params, *, grid=(2, 2), batch: int = 1,
         "unit_n": unit_n,
         "num_units": num_units,
         "batch": batch,
+        # Always present — an empty list is the verifier's proof that every
+        # candidate stayed inside its accumulator envelope at shard-local K.
+        "range_pruned": range_pruned,
     }
     shards = []
     per_shard_verdicts = {}

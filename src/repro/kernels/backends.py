@@ -34,7 +34,10 @@ from repro.backends.registry import KERNEL_SIBLINGS, PALLAS_SUFFIX  # noqa: F401
 _DEPRECATION_EMITTED = False
 
 
-def _register(*, block=None, interpret: bool | None = None) -> tuple[str, ...]:
+# Mutation is legal here: kernel_backends() calls this under its own
+# scoped_registry, and register_kernel_backends is the deprecated
+# caller-managed surface whose whole point is the unscoped write.
+def _register(*, block=None, interpret: bool | None = None) -> tuple[str, ...]:  # analysis: allow-registry-mutation
     from repro.backends.registry import mirror_design_spec
 
     for name in KERNEL_SIBLINGS:

@@ -362,9 +362,26 @@ def run_plan_mode(args, cfg, params) -> int:
     print(f"distinct backends chosen: "
           f"{', '.join(f'{d}@{b}' for d, b in distinct)} "
           f"({'mixed' if len(distinct) > 1 else 'uniform'} assignment)")
+    print(analysis_verdict(plan, site_names=[s.name for s in site_list]))
     print(f"plan saved to {path} (replay: serve --arch {args.arch}"
           f"{' --smoke' if args.smoke else ''} --backend-plan {path})")
     return 0
+
+
+def analysis_verdict(plan, site_names=None) -> str:
+    """One-line static numeric-safety verdict for a plan.
+
+    Runs ``repro.analysis.plan_lint`` over the plan (against the model's
+    site inventory when given, so dead/shadowed patterns and unmatched
+    sites are checked too) and renders the findings as the analysis CLI
+    would — the serving report carries the same verdict the gate enforces.
+    """
+    from repro.analysis import findings as findings_lib
+    from repro.analysis import plan_lint
+    found = plan_lint.lint_plan(plan, site_names=site_names)
+    for f in found:
+        print(f"  {f.render()}")
+    return findings_lib.verdict_line(found)
 
 
 def run_grid_plan_mode(args, cfg, params, grid: tuple[int, int]) -> int:
@@ -411,6 +428,7 @@ def run_grid_plan_mode(args, cfg, params, grid: tuple[int, int]) -> int:
               f"heterogeneous {hetero_e:.4f} uJ, best uniform ({best}) "
               f"{best_e:.4f} uJ -> {1.0 - hetero_e / max(best_e, 1e-30):.2%} "
               f"predicted saving")
+    print(analysis_verdict(gplan, site_names=[s.name for s in site_list]))
     print(f"grid plan saved to {path} (replay: serve --arch {args.arch}"
           f"{' --smoke' if args.smoke else ''} --backend-plan {path} "
           f"--grid {grid[0]},{grid[1]})")
@@ -581,6 +599,7 @@ def main() -> int:
                 else "")
         print(f"\n=== executing model on backend plan {args.backend_plan}"
               f"{gtag} ({', '.join(f'{d}@{b}' for d, b in distinct)}) ===")
+        print(analysis_verdict(plan))
         result = run_plan_execution(cfg, params, mesh, prompt, plan,
                                     args.tokens)
         qt = result["tokens"]

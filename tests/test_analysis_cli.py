@@ -1,0 +1,99 @@
+"""Acceptance tests for ``python -m repro.analysis`` — the gate exits 0 on
+the clean repo and non-zero on each hazardous fixture."""
+
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis.__main__ import main
+from repro.backends.plan import BackendPlan, SiteAssignment
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+def write_plan(tmp_path, entries, name="fixture.json"):
+    p = tmp_path / name
+    p.write_text(BackendPlan(sites=tuple(entries)).to_json())
+    return p
+
+
+@pytest.fixture
+def bare_root(tmp_path):
+    """A --root with no example plans and no lintable source."""
+    (tmp_path / "examples" / "plans").mkdir(parents=True)
+    (tmp_path / "src").mkdir()
+    return tmp_path
+
+
+class TestCliFixtures:
+    def test_overflow_hazardous_plan_exits_nonzero(self, tmp_path, bare_root,
+                                                   capsys):
+        plan = write_plan(tmp_path, [
+            SiteAssignment("big", "ugemm", 8, k=2**20)])
+        rc = main(["--skip-ranges", "--root", str(bare_root),
+                   "--plan", str(plan)])
+        assert rc != 0
+        out = capsys.readouterr().out
+        assert "acc-overflow" in out and "error" in out
+
+    def test_shadowed_pattern_plan_exits_nonzero(self, tmp_path, bare_root,
+                                                 capsys):
+        plan = write_plan(tmp_path, [
+            SiteAssignment("layers/*", "bgemm", 8),
+            SiteAssignment("layers/*", "tubgemm", 4)])
+        rc = main(["--skip-ranges", "--root", str(bare_root),
+                   "--plan", str(plan)])
+        assert rc != 0
+        assert "shadowed-pattern" in capsys.readouterr().out
+
+    def test_registry_mutation_source_exits_nonzero(self, bare_root, capsys):
+        (bare_root / "src" / "sneaky.py").write_text(textwrap.dedent("""\
+            from repro.core.gemm_sims import register_design
+            register_design(spec)
+        """))
+        rc = main(["--skip-ranges", "--skip-plans",
+                   "--root", str(bare_root)])
+        assert rc != 0
+        assert "registry-mutation" in capsys.readouterr().out
+
+    def test_clean_fixture_root_exits_zero(self, bare_root, capsys):
+        rc = main(["--skip-ranges", "--root", str(bare_root)])
+        assert rc == 0
+        assert "analysis: OK" in capsys.readouterr().out
+
+    def test_unknown_arch_rejected(self, bare_root):
+        with pytest.raises(SystemExit):
+            main(["--arch", "not-a-model", "--root", str(bare_root)])
+
+
+class TestCliOnRepo:
+    def test_plans_and_source_pass_on_clean_repo(self, capsys):
+        # the shipped example plans + the repo's own source lint clean
+        rc = main(["--skip-ranges", "--root", str(REPO_ROOT)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "plan-lint" in out and "source-lint" in out
+
+    def test_all_three_passes_run_and_exit_zero(self, tmp_path, capsys):
+        # full gate on one registered config: ranges (abstract trace of the
+        # real published config), plan lint, source lint — and --json output
+        report = tmp_path / "findings.json"
+        rc = main(["--arch", "musicgen-medium", "--root", str(REPO_ROOT),
+                   "--json", str(report)])
+        assert rc == 0
+        out = capsys.readouterr().out
+        assert "ranges: musicgen-medium" in out
+        assert "envelope points" in out
+        doc = json.loads(report.read_text())
+        assert doc["verdict"].startswith("analysis:")
+        assert all(f["severity"] == "warning" for f in doc["findings"])
+
+    def test_shipped_plans_carry_pruning_evidence(self):
+        # the regenerated example plans ship the verifier's meta block
+        for p in sorted((REPO_ROOT / "examples" / "plans").glob("*.json")):
+            doc = json.loads(p.read_text())
+            meta = doc.get("meta", {})
+            assert "range_pruned" in meta, p.name
+            assert meta["range_pruned"] == []

@@ -1,0 +1,202 @@
+"""Unit tests for ``repro.analysis.plan_lint`` and ``source_lint``."""
+
+import textwrap
+
+import pytest
+
+from repro.analysis import findings as findings_lib
+from repro.analysis import plan_lint, source_lint
+from repro.backends.grid import GridPlan
+from repro.backends.plan import BackendPlan, SiteAssignment
+
+
+def rules(found):
+    return sorted(f.rule for f in found)
+
+
+def errors(found):
+    return sorted(f.rule for f in findings_lib.errors(found))
+
+
+class TestPlanLint:
+    def test_clean_plan(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("layers/attn/wq", "tubgemm", 4, k=512),
+            SiteAssignment("*", "bgemm", 8, k=512),
+        ))
+        found = plan_lint.lint_backend_plan(
+            plan, site_names=["layers/attn/wq", "layers/mlp/w_up"])
+        assert errors(found) == []
+
+    def test_overflow_hazardous_entry(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("big", "ugemm", 8, k=2**20),))
+        found = plan_lint.lint_backend_plan(plan)
+        assert "acc-overflow" in errors(found)
+
+    def test_unknown_design_and_invalid_bits(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("a", "mystery", 4),
+            SiteAssignment("b", "bgemm", 77),))
+        assert errors(plan_lint.lint_backend_plan(plan)) \
+            == ["invalid-bits", "unknown-design"]
+
+    def test_duplicate_pattern_is_shadowed(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("layers/*", "bgemm", 8),
+            SiteAssignment("layers/*", "tubgemm", 4),))
+        found = plan_lint.lint_backend_plan(plan)
+        assert "shadowed-pattern" in errors(found)
+
+    def test_shadowed_by_more_specific_cover(self):
+        # the exact pattern takes every site the wildcard could win, and the
+        # wildcard matches nothing else in the inventory -> it never wins
+        plan = BackendPlan(sites=(
+            SiteAssignment("layers/attn/wq", "bgemm", 8),
+            SiteAssignment("layers/attn/*", "tubgemm", 4),))
+        found = plan_lint.lint_backend_plan(
+            plan, site_names=["layers/attn/wq"])
+        assert "shadowed-pattern" in errors(found)
+
+    def test_dead_pattern_and_unmatched_site(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("nothing/matches/me", "bgemm", 8),))
+        found = plan_lint.lint_backend_plan(
+            plan, site_names=["layers/attn/wq"])
+        assert "dead-pattern" in errors(found)
+        warn_rules = [f.rule for f in findings_lib.warnings_(found)]
+        assert "unmatched-site" in warn_rules
+
+    def test_guard_relaxed_is_warning_not_error(self):
+        plan = BackendPlan(sites=(
+            SiteAssignment("a", "bgemm", 8, guard_relaxed=True),))
+        found = plan_lint.lint_backend_plan(plan)
+        assert errors(found) == []
+        assert "guard-relaxed" in [f.rule for f in
+                                   findings_lib.warnings_(found)]
+
+    def test_grid_plan_checks_shard_local_k(self):
+        # aggregate K=100k splits to 50k per shard on units_x=2 — inside
+        # ugemm@8's 65535 envelope, so the grid plan is clean while the
+        # same assignment in a flat plan overflows
+        agg = BackendPlan(sites=(
+            SiteAssignment("big", "ugemm", 8, k=100_000),))
+        shard = BackendPlan(sites=(
+            SiteAssignment("big", "ugemm", 8, k=50_000),))
+        gplan = GridPlan(units_x=2, units_y=1, aggregate=agg,
+                         shards=(("0,0", shard), ("1,0", shard)))
+        assert errors(plan_lint.lint_grid_plan(gplan)) == []
+        assert "acc-overflow" in errors(plan_lint.lint_backend_plan(agg))
+
+    def test_grid_plan_overflow_at_shard_k(self):
+        agg = BackendPlan(sites=(
+            SiteAssignment("big", "ugemm", 8, k=200_000),))
+        gplan = GridPlan(units_x=2, units_y=1, aggregate=agg, shards=())
+        assert "acc-overflow" in errors(plan_lint.lint_grid_plan(gplan))
+
+    def test_lint_plan_file_unloadable(self, tmp_path):
+        p = tmp_path / "broken.json"
+        p.write_text("{not json")
+        found = plan_lint.lint_plan_file(p)
+        assert errors(found) == ["unloadable-plan"]
+
+
+SRC_MUTATION = textwrap.dedent("""\
+    from repro.core.gemm_sims import register_design
+    register_design(spec)
+""")
+
+SRC_SCOPED = textwrap.dedent("""\
+    from repro.core.gemm_sims import register_design, scoped_registry
+    with scoped_registry():
+        register_design(spec)
+""")
+
+SRC_PRAGMA = textwrap.dedent("""\
+    from repro.core.gemm_sims import register_design
+    register_design(spec)  # analysis: allow-registry-mutation
+""")
+
+SRC_SHIM = textwrap.dedent("""\
+    from repro.core import gemm_sims
+    out = gemm_sims.gemm(a, b, design="tubgemm")
+""")
+
+SRC_FLOAT_ACC = textwrap.dedent("""\
+    import jax.numpy as jnp
+    def tugemm_kernel(a, b):
+        return jnp.einsum("mk,kn->mn", a, b)
+""")
+
+SRC_INT_ACC = textwrap.dedent("""\
+    import jax.numpy as jnp
+    def tugemm_kernel(a, b):
+        return jnp.einsum("mk,kn->mn", a, b,
+                          preferred_element_type=jnp.int32)
+""")
+
+SRC_RNG = textwrap.dedent("""\
+    import jax
+    def sample(key):
+        return jax.random.normal(key, (4,))
+""")
+
+SRC_RNG_JITTED = textwrap.dedent("""\
+    import jax
+    @jax.jit
+    def sample(key):
+        return jax.random.normal(key, (4,))
+""")
+
+
+class TestSourceLint:
+    def test_unscoped_registry_mutation(self):
+        found = source_lint.lint_source(SRC_MUTATION, rel="src/foo.py")
+        assert rules(found) == ["registry-mutation"]
+
+    def test_scoped_mutation_is_clean(self):
+        assert source_lint.lint_source(SRC_SCOPED, rel="src/foo.py") == []
+
+    def test_pragma_suppresses(self):
+        assert source_lint.lint_source(SRC_PRAGMA, rel="src/foo.py") == []
+
+    def test_defining_module_exempt(self):
+        found = source_lint.lint_source(
+            SRC_MUTATION, rel="src/repro/core/gemm_sims.py")
+        assert found == []
+
+    def test_deprecated_shim_call(self):
+        found = source_lint.lint_source(SRC_SHIM, rel="src/foo.py")
+        assert rules(found) == ["deprecated-shim"]
+
+    def test_float_accumulation_in_exact_kernel(self):
+        found = source_lint.lint_source(
+            SRC_FLOAT_ACC, rel="src/repro/kernels/foo.py")
+        assert "float-accumulation" in rules(found)
+        assert source_lint.lint_source(
+            SRC_INT_ACC, rel="src/repro/kernels/foo.py") == []
+
+    def test_unjitted_rng_only_on_execute_path(self):
+        found = source_lint.lint_source(
+            SRC_RNG, rel="src/repro/backends/foo.py")
+        assert rules(found) == ["unjitted-rng"]
+        assert source_lint.lint_source(
+            SRC_RNG_JITTED, rel="src/repro/backends/foo.py") == []
+        # the same code outside the execute layer is fine
+        assert source_lint.lint_source(SRC_RNG, rel="src/foo.py") == []
+
+    def test_syntax_error_is_a_finding(self):
+        found = source_lint.lint_source("def broken(:", rel="src/foo.py")
+        assert rules(found) == ["syntax-error"]
+
+    def test_repo_is_clean(self):
+        import pathlib
+        root = pathlib.Path(__file__).resolve().parents[1]
+        found = source_lint.lint_repo(root)
+        assert found == [], "\n".join(f.render() for f in found)
+
+    def test_tests_are_exempt(self, tmp_path):
+        (tmp_path / "src").mkdir()
+        (tmp_path / "src" / "tests").mkdir()
+        (tmp_path / "src" / "tests" / "test_x.py").write_text(SRC_MUTATION)
+        assert source_lint.lint_repo(tmp_path) == []

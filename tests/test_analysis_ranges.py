@@ -1,0 +1,247 @@
+"""Property tests for ``repro.analysis.ranges`` — the interval bounds are
+checked against brute-force max-accumulator enumeration and against the
+actual simulators, and the runtime guards built on them are exercised."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # CI image has no hypothesis; use the local shim
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.analysis import ranges
+from repro.backends import as_grid, resolve
+from repro.core import gemm_sims
+from repro.core.quantization import vmax
+
+EXACT_FNS = {
+    "bgemm": gemm_sims.bgemm_exact,
+    "tugemm": gemm_sims.tugemm_exact,
+    "tubgemm": gemm_sims.tubgemm_exact,
+}
+EXACT_DESIGNS = tuple(EXACT_FNS)
+BITS = (2, 3, 4, 8)
+
+
+class TestInterval:
+    def test_mul_matches_corner_enumeration(self):
+        for lo1, hi1, lo2, hi2 in [(-3, 5, -2, 7), (-1, 1, -1, 1),
+                                   (0, 4, -6, -2), (-5, -1, 3, 9)]:
+            got = ranges.Interval(lo1, hi1) * ranges.Interval(lo2, hi2)
+            vals = [a * b for a in range(lo1, hi1 + 1)
+                    for b in range(lo2, hi2 + 1)]
+            assert got.lo == min(vals) and got.hi == max(vals)
+
+    def test_add_and_scale(self):
+        i = ranges.Interval(-2, 3)
+        assert (i + i) == ranges.Interval(-4, 6)
+        assert i.scale(4) == ranges.Interval(-8, 12)
+        with pytest.raises(ValueError):
+            i.scale(-1)
+
+    def test_empty_interval_rejected(self):
+        with pytest.raises(ValueError):
+            ranges.Interval(2, 1)
+
+
+class TestOutputBound:
+    @pytest.mark.parametrize("design", EXACT_DESIGNS)
+    @pytest.mark.parametrize("bits", BITS)
+    def test_tight_at_all_vmax(self, design, bits):
+        # the hi corner is achieved: an all-+Vmax contraction lands ON it
+        for k in (1, 3, 7):
+            v = vmax(bits)
+            a = jnp.full((1, k), v, jnp.int32)
+            b = jnp.full((k, 1), v, jnp.int32)
+            out = int(np.asarray(EXACT_FNS[design](a, b))[0, 0])
+            iv = ranges.output_interval(design, bits, k)
+            assert out == iv.hi == k * v * v
+            out_lo = int(np.asarray(EXACT_FNS[design](-a, b))[0, 0])
+            assert out_lo == iv.lo
+
+    @pytest.mark.parametrize("design", EXACT_DESIGNS)
+    def test_brute_force_enumeration_small(self, design):
+        # exhaustive: every code vector pair at tiny (bits, k) stays inside
+        # the interval, and the enumerated max hits the bound exactly
+        for bits, k in [(2, 1), (2, 2), (3, 1), (3, 2)]:
+            v = vmax(bits)
+            codes = range(-v, v + 1)
+            iv = ranges.output_interval(design, bits, k)
+            worst = 0
+            for avec in itertools.product(codes, repeat=k):
+                for bvec in itertools.product(codes, repeat=k):
+                    dot = sum(x * y for x, y in zip(avec, bvec))
+                    assert iv.contains(dot)
+                    worst = max(worst, abs(dot))
+            assert worst == iv.abs_max == k * v * v
+
+    @given(design=st.sampled_from(EXACT_DESIGNS),
+           bits=st.sampled_from(BITS),
+           k=st.integers(min_value=1, max_value=8),
+           seed=st.integers(min_value=0, max_value=2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_simulator_outputs_within_interval(self, design, bits, k, seed):
+        v = vmax(bits)
+        rng = np.random.default_rng(seed)
+        a = rng.integers(-v, v + 1, (3, k)).astype(np.int32)
+        b = rng.integers(-v, v + 1, (k, 2)).astype(np.int32)
+        out = np.asarray(EXACT_FNS[design](jnp.asarray(a), jnp.asarray(b)))
+        iv = ranges.output_interval(design, bits, k)
+        assert out.max() <= iv.hi and out.min() >= iv.lo
+        # every prefix partial sum is also bounded (j-fold interval ⊆ k-fold)
+        partials = np.cumsum(a[:, :, None] * b[None, :, :], axis=1)
+        assert abs(partials).max() <= iv.abs_max
+
+    def test_word_sparsity_tightens_monotonically(self):
+        base = ranges.output_interval("bgemm", 8, 100)
+        tighter = ranges.output_interval("bgemm", 8, 100, word_sparsity=0.5)
+        zero = ranges.output_interval("bgemm", 8, 100, word_sparsity=1.0)
+        assert tighter.abs_max < base.abs_max
+        assert zero.abs_max == 0
+        with pytest.raises(ValueError):
+            ranges.output_interval("bgemm", 8, 100, word_sparsity=1.5)
+
+
+class TestCounterBound:
+    @pytest.mark.parametrize("design", EXACT_DESIGNS)
+    @pytest.mark.parametrize("bits", BITS)
+    def test_register_dominates_output_for_exact_designs(self, design, bits):
+        # bgemm/tubgemm registers ARE the partial sum; tugemm's pulse count
+        # dominates it.  (uGEMM is excluded: its register holds AND-pulse
+        # counts — a different domain checked against the fp32 window.)
+        for k in (1, 5, 64):
+            reg = ranges.counter_interval(design, bits, k)
+            out = ranges.output_interval(design, bits, k)
+            assert reg.abs_max >= out.abs_max
+
+    @pytest.mark.parametrize("bits", BITS)
+    def test_ugemm_counts_slots_per_step(self, bits):
+        for k in (1, 5, 64):
+            reg = ranges.counter_interval("ugemm", bits, k)
+            assert reg.abs_max == k * 2 ** bits
+
+    def test_tugemm_counts_slot_pulses_not_products(self):
+        # K * L^2 pulses with L = 2^(bits-1): strictly above K * Vmax^2
+        bits, k = 4, 10
+        reg = ranges.counter_interval("tugemm", bits, k)
+        assert reg.abs_max == k * (2 ** (bits - 1)) ** 2
+        assert reg.abs_max > ranges.output_interval("tugemm", bits, k).abs_max
+
+    def test_pallas_mirrors_inherit_sibling_envelope(self):
+        for name in ("tugemm_pallas", "tubgemm_pallas"):
+            base = name[:-len("_pallas")]
+            assert ranges.design_family(name) == base
+            assert ranges.max_safe_k(name, 4) == ranges.max_safe_k(base, 4)
+
+
+class TestMaxSafeK:
+    def test_ugemm_matches_paper_fp32_window(self):
+        # the paper's L*K < 2^24 streaming envelope: L = 2^bits slots
+        assert ranges.max_safe_k("ugemm", 8) == (2**24 - 1) // 2**8 == 65535
+        assert ranges.capacity("ugemm", 8) == ranges.FLOAT32_EXACT_MAX
+
+    @pytest.mark.parametrize("design", ranges.FAMILIES)
+    @pytest.mark.parametrize("bits", BITS)
+    def test_boundary_is_exact(self, design, bits):
+        edge = ranges.max_safe_k(design, bits)
+        assert ranges.accumulator_bound(design, bits, edge).ok
+        assert ranges.check_gemm(design, bits, edge, where="t") is None
+        bad = ranges.check_gemm(design, bits, edge + 1, where="t")
+        assert bad is not None and bad.rule == "acc-overflow"
+        assert bad.severity == ranges.ERROR
+
+    def test_empty_envelope_width(self):
+        # hypothetical ugemm at 24 bits: 2^24 counts/step > fp32 window
+        assert ranges.max_safe_k("ugemm", 24) == 0
+
+    def test_unknown_design(self):
+        with pytest.raises(KeyError):
+            ranges.accumulator_bound("mystery", 8, 4)
+        f = ranges.check_gemm("mystery", 8, 4, where="t")
+        assert f is not None and f.rule == "unknown-design"
+        # runtime guard passes unknowns silently (custom registrations)
+        ranges.assert_within_envelope("mystery", 8, 10**9)
+
+
+class TestRuntimeGuards:
+    def test_execute_rejects_over_envelope_contraction(self):
+        backend = resolve("ugemm", bits=8)
+        k = ranges.max_safe_k("ugemm", 8) + 1
+        a = jnp.ones((1, k), jnp.int32)
+        b = jnp.ones((k, 1), jnp.int32)
+        with pytest.raises(ValueError, match="bit-exact"):
+            backend.execute(a, b)
+        with pytest.raises(ValueError, match="largest safe K"):
+            backend.stream(a, b)
+
+    def test_resolve_rejects_empty_envelope_width(self):
+        with pytest.raises(ValueError, match="empty accumulator envelope"):
+            resolve("ugemm", bits=24)
+
+    def test_grid_guard_uses_shard_local_k(self):
+        k = ranges.max_safe_k("ugemm", 8) + 1
+        a = jnp.ones((1, k), jnp.int32)
+        b = jnp.ones((k, 1), jnp.int32)
+        with pytest.raises(ValueError, match="cannot run"):
+            as_grid(resolve("ugemm", bits=8), 1, 1).execute(a, b)
+        # a 2-way K split halves the shard-local contraction back inside
+        grid2 = as_grid(resolve("ugemm", bits=8), 2, 1)
+        assert grid2.shard_common_dim(k) <= ranges.max_safe_k("ugemm", 8)
+        ranges.assert_within_envelope("ugemm", 8, grid2.shard_common_dim(k))
+
+    def test_use_plan_validates_recorded_geometry(self):
+        from repro.backends import runtime
+        from repro.backends.plan import BackendPlan, SiteAssignment
+        bad = BackendPlan(sites=(
+            SiteAssignment("big", "ugemm", 8, k=2**20),))
+        with pytest.raises(ValueError, match="plan entry 'big'"):
+            with runtime.use_plan(bad):
+                pass
+        # the same assignment is accepted once a grid splits K back inside
+        with runtime.use_plan(bad, grid=(32, 1)):
+            pass
+
+    def test_exact_designs_accept_model_scale_k(self):
+        backend = resolve("tubgemm", bits=8)
+        a = jnp.ones((1, 16384), jnp.int32)
+        b = jnp.ones((16384, 1), jnp.int32)
+        assert int(np.asarray(backend.execute(a, b))[0, 0]) == 16384
+
+
+class TestPlannerPruning:
+    def _huge_site(self, k=100_000):
+        from repro.eval import planner
+        leaf = np.random.default_rng(0).standard_normal((k, 4)) \
+            .astype(np.float32)
+        return planner.GemmSite(name="huge", m=1, k=k, n_out=4, count=1,
+                                leaf=leaf)
+
+    def test_site_candidates_prunes_and_records(self):
+        from repro.eval import planner
+        pruned = []
+        cands = planner.site_candidates(
+            self._huge_site(), designs=("ugemm", "bgemm"),
+            bits_candidates=(4, 8), pruned=pruned)
+        pairs = {(c.design, c.bits) for c in cands}
+        assert ("ugemm", 8) not in pairs and ("bgemm", 8) in pairs
+        assert [(r["design"], r["bits"]) for r in pruned] == [("ugemm", 8)]
+        assert pruned[0]["max_safe_k"] == ranges.max_safe_k("ugemm", 8)
+
+    def test_build_plan_records_evidence_and_raises_when_infeasible(self):
+        from repro.eval import planner
+        site = self._huge_site()
+        plan = planner.build_plan(object(), None, sites=[site],
+                                  designs=("ugemm", "bgemm"),
+                                  bits_candidates=(4, 8))
+        meta = dict(plan.meta)
+        assert [(r["design"], r["bits"]) for r in meta["range_pruned"]] \
+            == [("ugemm", 8)]
+        assert "ugemm@8" not in meta["totals"]["uniform"]
+        with pytest.raises(ValueError, match="accumulator envelope"):
+            planner.build_plan(object(), None, sites=[site],
+                               designs=("ugemm",), bits_candidates=(8,))
