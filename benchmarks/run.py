@@ -34,6 +34,7 @@ BENCH_SPECS: list[tuple[str, str, str, dict]] = [
      "llama2_calibration", {}),
     ("sweetspot", "benchmarks.sweetspot_bench", "sweetspot", {}),
     ("plan", "benchmarks.plan_bench", "plan", {}),
+    ("serving", "benchmarks.serving_bench", "serving", {}),
     ("grid", "benchmarks.grid_bench", "grid", {}),
     ("ugemm_accuracy", "benchmarks.accuracy_bench", "ugemm_accuracy", {}),
     ("unary_engine_sweep", "benchmarks.accuracy_bench", "unary_engine_sweep", {}),

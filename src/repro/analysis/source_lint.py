@@ -51,7 +51,7 @@ _REGISTRY_MODULE = "repro.core.gemm_sims"
 _REGISTRY_MUTATORS = {"register_design", "registry_restore"}
 _SCOPE_MANAGERS = {"scoped_registry", "kernel_backends"}
 
-_EXECUTE_PATH_PARTS = ("repro/backends/", "repro/kernels/")
+_EXECUTE_PATH_PARTS = ("repro/backends/", "repro/kernels/", "repro/serving/")
 _EXACT_KERNEL_PREFIXES = ("bgemm", "tugemm", "tubgemm", "tu_gemm",
                           "tub_gemm", "quant_gemm")
 _CONTRACTION_FUNCS = {"einsum", "matmul", "dot", "dot_general", "tensordot"}

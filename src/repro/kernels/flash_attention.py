@@ -40,7 +40,8 @@ NEG_INF = -1e30
 # ---------------------------------------------------------------------------
 
 def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
-                causal: bool, scale: float, bq: int, bk: int, nk: int):
+                causal: bool, scale: float, bq: int, bk: int, nk: int,
+                kv_len: int | None):
     qi, ki = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -50,6 +51,8 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+    if kv_len is not None:  # skip KV tiles that are entirely padding
+        run = jnp.logical_and(run, ki * bk < kv_len)
 
     @pl.when(run)
     def _tile():
@@ -62,6 +65,9 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if kv_len is not None:
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
         m_prev = m_scr[...]                            # (bq, 1)
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
         p = jnp.exp(s - m_new)                         # (bq, bk)
@@ -80,14 +86,15 @@ def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr, acc_scr, *,
         lse_ref[0] = (m_scr[...] + jnp.log(l))[:, 0]
 
 
-def _fwd(q, k, v, *, causal: bool, bq: int, bk: int, interpret: bool):
+def _fwd(q, k, v, *, causal: bool, bq: int, bk: int, kv_len: int | None,
+         interpret: bool):
     bh, sq, d = q.shape
     skv = k.shape[1]
     nq, nk = sq // bq, skv // bk
     scale = 1.0 / (d ** 0.5)
     out, lse = pl.pallas_call(
         functools.partial(_fwd_kernel, causal=causal, scale=scale,
-                          bq=bq, bk=bk, nk=nk),
+                          bq=bq, bk=bk, nk=nk, kv_len=kv_len),
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
@@ -126,7 +133,7 @@ def _vmem(shape, dtype):
 
 def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
                acc_scr, *, causal: bool, scale: float, bq: int, bk: int,
-               nk: int):
+               nk: int, kv_len: int | None):
     qi, ki = pl.program_id(1), pl.program_id(2)
 
     @pl.when(ki == 0)
@@ -134,6 +141,8 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+    if kv_len is not None:
+        run = jnp.logical_and(run, ki * bk < kv_len)
 
     @pl.when(run)
     def _tile():
@@ -145,6 +154,9 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if kv_len is not None:
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
         p = jnp.exp(s - lse_ref[0][:, None])            # (bq, bk)
         dov = jax.lax.dot_general(do_ref[0], v_ref[0],
                                   (((1,), (1,)), ((), ())),
@@ -161,7 +173,7 @@ def _dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
 
 def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
                 dk_ref, dv_ref, dk_scr, dv_scr, *, causal: bool, scale: float,
-                bq: int, bk: int, nq: int):
+                bq: int, bk: int, nq: int, kv_len: int | None):
     ki, qi = pl.program_id(1), pl.program_id(2)
 
     @pl.when(qi == 0)
@@ -170,6 +182,8 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_scr[...] = jnp.zeros_like(dv_scr)
 
     run = (not causal) or (qi * bq + bq - 1 >= ki * bk)
+    if kv_len is not None:  # all-padding key tiles keep their zero grads
+        run = jnp.logical_and(run, ki * bk < kv_len)
 
     @pl.when(run)
     def _tile():
@@ -181,6 +195,9 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
             qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if kv_len is not None:
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
         p = jnp.exp(s - lse_ref[0][:, None])            # (bq, bk)
         dv_scr[...] += jax.lax.dot_general(
             p.astype(do_ref.dtype), do_ref[0], (((0,), (0,)), ((), ())),
@@ -199,7 +216,8 @@ def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
         dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
 
 
-def _bwd(res, g, *, causal: bool, bq: int, bk: int, interpret: bool):
+def _bwd(res, g, *, causal: bool, bq: int, bk: int, kv_len: int | None,
+         interpret: bool):
     q, k, v, o, lse = res
     do = g[0] if isinstance(g, tuple) else g
     bh, sq, d = q.shape
@@ -211,7 +229,7 @@ def _bwd(res, g, *, causal: bool, bq: int, bk: int, interpret: bool):
 
     dq = pl.pallas_call(
         functools.partial(_dq_kernel, causal=causal, scale=scale, bq=bq,
-                          bk=bk, nk=nk),
+                          bk=bk, nk=nk, kv_len=kv_len),
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
@@ -229,7 +247,7 @@ def _bwd(res, g, *, causal: bool, bq: int, bk: int, interpret: bool):
 
     dk, dv = pl.pallas_call(
         functools.partial(_dkv_kernel, causal=causal, scale=scale, bq=bq,
-                          bk=bk, nq=nq),
+                          bk=bk, nq=nq, kv_len=kv_len),
         grid=(bh, nk, nq),
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda b, j, i: (b, i, 0)),
@@ -256,19 +274,22 @@ def _bwd(res, g, *, causal: bool, bq: int, bk: int, interpret: bool):
 # Public op
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
-def _flash(q, k, v, causal, bq, bk, interpret):
-    out, _ = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, bq, bk, kv_len, interpret):
+    out, _ = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, kv_len=kv_len,
+                  interpret=interpret)
     return out
 
 
-def _flash_fwd_rule(q, k, v, causal, bq, bk, interpret):
-    out, lse = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, interpret=interpret)
+def _flash_fwd_rule(q, k, v, causal, bq, bk, kv_len, interpret):
+    out, lse = _fwd(q, k, v, causal=causal, bq=bq, bk=bk, kv_len=kv_len,
+                    interpret=interpret)
     return out, (q, k, v, out, lse)
 
 
-def _flash_bwd_rule(causal, bq, bk, interpret, res, g):
-    return _bwd(res, g, causal=causal, bq=bq, bk=bk, interpret=interpret)
+def _flash_bwd_rule(causal, bq, bk, kv_len, interpret, res, g):
+    return _bwd(res, g, causal=causal, bq=bq, bk=bk, kv_len=kv_len,
+                interpret=interpret)
 
 
 _flash.defvjp(_flash_fwd_rule, _flash_bwd_rule)
@@ -278,8 +299,14 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = DEFAULT_BQ,
                     bk: int = DEFAULT_BK, interpret: bool | None = None):
     """q/k/v: (B, S, H, D) -> (B, S, H, Dv).  Differentiable flash attention.
 
-    Sequence lengths must divide the block sizes (the model layer guarantees
-    power-of-two seq lens; block sizes clamp to the seq len).
+    Ragged sequence lengths (not a multiple of the block size — routine for
+    serving shapes) are padded up to the block grid internally: padded
+    *keys* are masked to ``NEG_INF`` inside the kernels (a static ``kv_len``
+    bound, so real queries never attend them and their gradients are exact
+    zeros), padded *query* rows attend real keys only through the causal
+    mask and are sliced off the output (their upstream cotangent is zero, so
+    they contribute nothing to dK/dV).  ``tests/test_flash_attention.py``
+    pins padded-vs-exact-multiple agreement for values and grads.
     """
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
@@ -287,11 +314,19 @@ def flash_attention(q, k, v, *, causal: bool = True, bq: int = DEFAULT_BQ,
     skv = k.shape[1]
     bq_ = min(bq, sq)
     bk_ = min(bk, skv)
-    if sq % bq_ or skv % bk_:
-        raise ValueError(f"seq lens ({sq},{skv}) must divide blocks ({bq_},{bk_})")
+    pad_q = -sq % bq_
+    pad_k = -skv % bk_
     # (B, S, H, D) -> (B*H, S, D)
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, skv, d)
-    of = _flash(qf, kf, vf, causal, bq_, bk_, interpret)
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    kv_len = skv if pad_k else None
+    of = _flash(qf, kf, vf, causal, bq_, bk_, kv_len, interpret)
+    if pad_q:
+        of = of[:, :sq]
     return of.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,76 @@
+"""Gather-based paged-KV decode attention.
+
+The serving engine (``repro.serving``) keeps each request's KV history in
+fixed-size *pages* of a preallocated pool — ``(num_pages, page_size, KVH,
+head_dim)`` per layer — indexed through a per-request *block table* (a row of
+page ids).  This module is the device-side read/write path over that layout:
+
+* :func:`write_kv_token` scatters one new K (or V) vector per request into
+  the page/slot its current length maps to;
+* :func:`gather_kv` materializes the per-request view ``(B, max_blocks *
+  page_size, KVH, head_dim)`` by gathering pool pages through the block
+  table;
+* :func:`paged_decode_attention` runs the gathered view through the exact
+  same ``naive_attention`` math as the contiguous decode path in
+  ``models/attention._gqa_fwd`` (same score widths, same mask construction,
+  same softmax), so paged decode is **bit-exact** with the contiguous
+  reference at fp32 — ``tests/test_serving.py`` pins this, including through
+  the ``kernels/flash_attention`` reference.
+
+Everything is functional (pools in, pools out) so the serving engine can jit
+one decode step over the whole layer stack with ``lax.scan``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import _repeat_kv, naive_attention
+
+__all__ = ["write_kv_token", "gather_kv", "paged_decode_attention"]
+
+
+def write_kv_token(pool: jax.Array, block_table: jax.Array,
+                   lengths: jax.Array, new: jax.Array,
+                   page_size: int) -> jax.Array:
+    """Scatter one new KV vector per request into its page pool.
+
+    ``pool``: (num_pages, page_size, KVH, hd); ``block_table``: (B,
+    max_blocks) int32 page ids; ``lengths``: (B,) int32 — the position the
+    new token lands at; ``new``: (B, KVH, hd).  Requests that should not
+    write (evicted slots) must point their block-table row at the reserved
+    trash page (page 0, never allocated — see ``serving.paged_kv``), which
+    absorbs their scatter without aliasing any live request's pages.
+    """
+    pages = jnp.take_along_axis(
+        block_table, (lengths // page_size)[:, None], axis=1)[:, 0]
+    slots = lengths % page_size
+    return pool.at[pages, slots].set(new.astype(pool.dtype))
+
+
+def gather_kv(pool: jax.Array, block_table: jax.Array) -> jax.Array:
+    """(num_pages, page_size, ...) gathered to (B, max_blocks * page_size, ...)."""
+    b, max_blocks = block_table.shape
+    gathered = pool[block_table]           # (B, max_blocks, page_size, ...)
+    return gathered.reshape(b, max_blocks * pool.shape[1], *pool.shape[2:])
+
+
+def paged_decode_attention(q: jax.Array, pool_k: jax.Array, pool_v: jax.Array,
+                           block_table: jax.Array, kv_valid_len: jax.Array,
+                           *, num_heads: int) -> jax.Array:
+    """Single-token GQA decode attention over the paged KV pool.
+
+    ``q``: (B, 1, H, hd); ``kv_valid_len``: (B,) — per-request valid history
+    *including* the token written this step.  Positions past a request's
+    valid length (page padding plus whatever the gathered pages carry beyond
+    it) are masked to the same -1e30 the contiguous path uses, so the
+    softmax rows match the contiguous cache bit-for-bit whenever the
+    gathered width equals the contiguous cache width.
+    """
+    kc = gather_kv(pool_k, block_table)
+    vc = gather_kv(pool_v, block_table)
+    k_full = _repeat_kv(kc.astype(q.dtype), num_heads)
+    v_full = _repeat_kv(vc.astype(q.dtype), num_heads)
+    return naive_attention(q, k_full, v_full, causal=False,
+                           kv_valid_len=kv_valid_len)

@@ -62,24 +62,20 @@ from repro.eval import sweetspot as sweetspot_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_grid_mesh, single_device_mesh
 from repro.models import model as model_lib
+from repro.serving import (ServingEngine, TrafficConfig, generate_trace,
+                           paged_vs_contiguous_probe)
+from repro.serving import energy as serving_energy
 
 
 def _iter_weight_matrices(cfg, params):
     """Yield ``(name, (k, n_out) float32 weight)`` for every priced matmul.
 
-    The single walk both the pricing workload and the measured-cycle report
-    are built from, so they see identical matrices.
+    The single walk the pricing workload, the measured-cycle report AND the
+    serving engine's energy-per-token model are built from (the canonical
+    implementation lives in ``repro.serving.energy``), so they all see
+    identical matrices.
     """
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
-    for path, leaf in flat:
-        if not hasattr(leaf, "ndim") or leaf.ndim < 2:
-            continue
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
-        if "embed" in name and not cfg.tie_embeddings:
-            continue
-        w = np.asarray(leaf, np.float32).reshape(leaf.shape[0], -1) \
-            if leaf.ndim == 2 else np.asarray(leaf, np.float32).reshape(-1, leaf.shape[-1])
-        yield name, w
+    return serving_energy.iter_weight_matrices(cfg, params)
 
 
 def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
@@ -435,14 +431,94 @@ def run_grid_plan_mode(args, cfg, params, grid: tuple[int, int]) -> int:
     return 0
 
 
+def run_traffic_mode(args, cfg, params, grid, plan) -> int:
+    """``serve traffic``: continuous vs static batching on one seeded trace.
+
+    Generates a Poisson traffic trace, serves it twice through the SAME
+    :class:`repro.serving.ServingEngine` (same paged pool geometry, same
+    backend/plan scope) — once under continuous batching, once under static
+    batching — and reports throughput, latency percentiles, batch occupancy
+    and Eq.-1 energy per token for both.  Gates (non-zero exit) on:
+
+    * continuous throughput >= static throughput on the same trace,
+    * both schedulers completing every request; on the float path the
+      per-request token streams must also be identical across schedulers
+      (under --execute-backend/--backend-plan they are reported but not
+      gated: the per-tensor activation-quantization scale spans the whole
+      decode batch, so a request's tokens legitimately depend on which
+      requests it is co-batched with),
+    * the paged decode step staying bit-exact with the contiguous
+      ``decode_step`` reference at fp32 (skipped under --grid: the sharded
+      variant is covered by the tier-1 subprocess tests).
+    """
+    if args.execute_backend and plan is not None:
+        print("error: serve traffic takes --execute-backend OR "
+              "--backend-plan, not both")
+        return 2
+    tcfg = TrafficConfig(num_requests=args.requests,
+                         arrival_rate=args.arrival_rate, seed=args.seed)
+    trace = generate_trace(tcfg)
+    engine = ServingEngine(
+        cfg, params, max_batch=args.batch, page_size=args.page_size,
+        num_pages=args.num_pages, max_seq_len=args.max_seq_len,
+        backend=args.execute_backend, plan=plan, bits=args.bits, grid=grid,
+        unit_n=args.unit_n, num_units=args.units,
+        pricing_design=args.gemm_backend)
+    scope = (f"plan {args.backend_plan}" if plan is not None
+             else f"backend {args.execute_backend}@{args.bits}"
+             if args.execute_backend else "float model")
+    print(f"\n=== serving traffic on {args.arch}: {len(trace)} requests "
+          f"(Poisson rate {args.arrival_rate}/step, seed {args.seed}), "
+          f"{args.batch} slots, {engine.num_pages} pages x {args.page_size} "
+          f"slots, {scope}, energy priced on {engine.energy.design} ===")
+    reports = {name: engine.run(trace, name)
+               for name in ("continuous", "static")}
+    print(f"{'scheduler':>12s} {'reqs':>5s} {'tokens':>7s} {'steps':>6s} "
+          f"{'tok/step':>9s} {'p50':>6s} {'p99':>7s} {'queue':>6s} "
+          f"{'occup':>6s} {'uJ/tok':>9s}")
+    for name, r in reports.items():
+        print(f"{name:>12s} {r.requests:5d} {r.tokens:7d} {r.steps:6d} "
+              f"{r.throughput_tok_per_step:9.3f} {r.latency_p50:6.1f} "
+              f"{r.latency_p99:7.1f} {r.queue_delay_mean:6.2f} "
+              f"{r.occupancy:6.3f} {r.energy_per_token_uj:9.4f}")
+    rc, rs = reports["continuous"], reports["static"]
+    ok = True
+    gain = rc.throughput_tok_per_step / max(rs.throughput_tok_per_step, 1e-30)
+    beats = rc.throughput_tok_per_step >= rs.throughput_tok_per_step
+    print(f"continuous vs static on the same trace: {gain:.2f}x throughput, "
+          f"p99 latency {rc.latency_p99:.0f} vs {rs.latency_p99:.0f} steps")
+    if not beats:
+        print("WARNING: continuous batching did not beat static batching")
+        ok = False
+    complete = (rc.requests == len(trace) == rs.requests)
+    same_tokens = rc.request_tokens == rs.request_tokens
+    quantized = args.execute_backend or plan is not None
+    note = (" (informational: per-tensor act-quant couples co-batched rows)"
+            if quantized else "")
+    print(f"all {len(trace)} requests completed under both schedulers: "
+          f"{complete}; per-request token streams identical: "
+          f"{same_tokens}{note}")
+    ok = ok and complete and (same_tokens or quantized)
+    if grid is None:
+        diff = paged_vs_contiguous_probe(cfg, params,
+                                         page_size=args.page_size)
+        tag = "bit-exact" if diff == 0.0 else f"max |diff| {diff:.3e}"
+        print(f"paged decode vs contiguous decode_step (fp32): {tag}")
+        ok = ok and diff == 0.0
+    return 0 if ok else 1
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("mode", nargs="?", default="serve",
-                    choices=["serve", "plan"],
+                    choices=["serve", "plan", "traffic"],
                     help="'serve' generates tokens (default); 'plan' derives "
                          "+ saves a per-layer mixed-precision backend plan "
                          "for the config and reports predicted vs uniform "
-                         "energy and measured per-site decode cycles")
+                         "energy and measured per-site decode cycles; "
+                         "'traffic' serves a seeded Poisson trace through "
+                         "the paged continuous-batching engine and compares "
+                         "continuous vs static batching")
     ap.add_argument("--arch", default="llama3-8b", choices=list(configs.ARCH_IDS))
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--batch", type=int, default=4)
@@ -466,6 +542,20 @@ def main() -> int:
     ap.add_argument("--bits", type=int, default=4, choices=[2, 4, 8])
     ap.add_argument("--unit-n", type=int, default=128)
     ap.add_argument("--units", type=int, default=64)
+    ap.add_argument("--requests", type=int, default=12,
+                    help="[traffic] number of requests in the seeded trace")
+    ap.add_argument("--arrival-rate", type=float, default=1.0,
+                    help="[traffic] Poisson arrivals per scheduler step")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="[traffic] trace seed (arrivals + lengths)")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="[traffic] KV-cache page size in token slots")
+    ap.add_argument("--num-pages", type=int, default=None,
+                    help="[traffic] KV pool size in pages (default: every "
+                         "slot can hold a worst-case request, +1 trash page)")
+    ap.add_argument("--max-seq-len", type=int, default=64,
+                    help="[traffic] per-request position budget "
+                         "(prompt + output)")
     ap.add_argument("--grid", default=None, metavar="X,Y",
                     help="tensor-parallel PE-array grid: 'plan' derives a "
                          "per-shard heterogeneous GridPlan; execution modes "
@@ -499,7 +589,8 @@ def main() -> int:
     # runs the jitted steps on the grid mesh so the in-step shard_maps and
     # the step shardings agree on one device set.
     needs_grid_mesh = grid is not None and args.mode != "plan" \
-        and (args.execute_backend or args.backend_plan)
+        and (args.execute_backend or args.backend_plan
+             or args.mode == "traffic")
     mesh = (make_grid_mesh(*grid) if needs_grid_mesh
             else single_device_mesh())
     with mesh:
@@ -508,6 +599,8 @@ def main() -> int:
         if grid is not None:
             return run_grid_plan_mode(args, cfg, params, grid)
         return run_plan_mode(args, cfg, params)
+    if args.mode == "traffic":
+        return run_traffic_mode(args, cfg, params, grid, plan)
     rng = np.random.default_rng(0)
     prompt = jnp.asarray(
         rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)), jnp.int32)

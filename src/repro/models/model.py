@@ -26,7 +26,7 @@ from repro.models.config import ModelConfig
 __all__ = [
     "model_defs", "init_params", "param_pspecs", "cache_pspecs",
     "forward", "prefill", "decode_step", "init_caches", "loss_fn",
-    "count_params",
+    "count_params", "embed_in", "logits_out",
 ]
 
 
@@ -118,6 +118,14 @@ def _logits_out(params, cfg: ModelConfig, x):
         if cfg.logit_softcap is not None:
             logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
     return shard(logits, "batch", None, "vocab")
+
+
+# Public aliases: the serving engine (repro.serving.engine) drives its own
+# ragged paged decode loop over the layer stack but must share the
+# embedding/head math with decode_step *exactly* — its paged-vs-contiguous
+# bit-exactness tests compare full logits between the two paths.
+embed_in = _embed_in
+logits_out = _logits_out
 
 
 def forward(params: dict, cfg: ModelConfig, tokens=None, *, embeds=None,

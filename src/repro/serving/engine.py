@@ -1,0 +1,429 @@
+"""Continuous-batching serving engine over the paged KV cache.
+
+One :class:`ServingEngine` owns a fixed decode batch of ``max_batch`` slots,
+a :class:`~repro.serving.paged_kv.PagedKVCache`, and a single jitted decode
+step that advances *every* slot one token per scheduler step:
+
+* **prefill** (admission): the prompt runs through ``model_lib.prefill``
+  (padded to a power-of-two bucket — causal attention makes the valid
+  prefix independent of tail padding), its KV is copied into freshly
+  allocated pages, and its first token comes off the prompt's last logits;
+* **decode** (every step): the jitted step embeds each slot's pending
+  token at its own position, scatters the new K/V into its pages
+  (``kernels.paged_attention.write_kv_token``), attends over the gathered
+  pages, and emits next-token logits.  The step mirrors
+  ``models.blocks._transformer_block`` op for op — same ``dense`` sites
+  under the same ``site_scope`` names (``layers/attn/wq`` …, ``lm_head``)
+  — so ``use_backend(...)``/``use_plan(...)`` scopes contract every token
+  on the selected unary engine exactly as the one-shot ``serve`` driver
+  does, and paged decode logits are bit-exact with
+  ``model_lib.decode_step`` whenever the requests are aligned
+  (``tests/test_serving.py``).
+
+Evicted/empty slots are kept deterministic: their hidden state is zeroed
+after embedding and their block-table rows point at the reserved trash
+page, so a freed slot can neither corrupt live pages nor leak
+schedule-dependent garbage into the per-tensor activation-quantization
+scales of a live backend scope.
+
+Time is counted in scheduler steps (1 decode step each); energy in Eq.-1
+dynamic µJ via :class:`~repro.serving.energy.EnergyModel`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import backends as backends_lib
+from repro.backends.runtime import site_scope
+from repro.kernels import paged_attention as paged_lib
+from repro.launch.mesh import make_grid_mesh, single_device_mesh
+from repro.models import attention as attn_lib
+from repro.models import model as model_lib
+from repro.models import rope as rope_lib
+from repro.models.common import dense, rmsnorm
+from repro.models.config import ModelConfig
+from repro.models.mlp import mlp_fwd
+from repro.serving.energy import EnergyModel
+from repro.serving.paged_kv import PagedKVCache
+from repro.serving.scheduler import (Request, RequestState, _SchedulerBase,
+                                     make_scheduler)
+from repro.serving.traffic import TrafficRequest
+
+__all__ = ["ServingEngine", "ServingReport", "paged_vs_contiguous_probe"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingReport:
+    """Metrics of one trace served under one scheduler."""
+    scheduler: str
+    requests: int
+    tokens: int
+    steps: int
+    throughput_tok_per_step: float
+    latency_p50: float
+    latency_p99: float
+    queue_delay_mean: float
+    occupancy: float
+    energy_uj: float
+    energy_per_token_uj: float
+    design: str
+    bits: int
+    max_batch: int
+    page_size: int
+    num_pages: int
+    events: tuple[tuple[int, str, int], ...]
+    latencies: tuple[int, ...]
+    request_tokens: dict[int, tuple[int, ...]]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["events"] = [list(e) for e in self.events]
+        d["latencies"] = list(self.latencies)
+        d["request_tokens"] = {str(k): list(v)
+                               for k, v in self.request_tokens.items()}
+        return d
+
+
+def _bucket(n: int, floor: int = 4) -> int:
+    """Next power of two >= max(n, floor) — bounds prefill retraces."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def paged_vs_contiguous_probe(cfg: ModelConfig, params, *, batch: int = 2,
+                              prompt_len: int = 5, steps: int = 3,
+                              page_size: int = 4) -> float:
+    """Max |paged - contiguous| decode logit difference at fp32 (0.0 = exact).
+
+    Runs ``steps`` aligned decode steps (every slot at the same position, so
+    ``model_lib.decode_step``'s scalar ``cache_pos`` applies) through both
+    the engine's paged scatter/gather step and the contiguous
+    ``dynamic_update_slice`` cache path, greedy-feeding each path its own
+    argmax token, and returns the worst absolute logit difference seen.
+    ``page_size`` deliberately defaults to a non-divisor of typical prompt
+    lengths so partially filled pages are exercised.  The serving CLI, the
+    serving benchmark and the tier-1 tests all gate on this returning 0.0.
+    """
+    from repro.launch import steps as steps_lib  # avoid cycle at import time
+
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    total = prompt_len + steps + 1
+    engine = ServingEngine(cfg, params, max_batch=batch, page_size=page_size,
+                           max_seq_len=_bucket(total))
+    rng = np.random.default_rng(1234)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (batch, prompt_len)).astype(np.int32)
+    cache = PagedKVCache(
+        num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, num_pages=engine.num_pages,
+        page_size=page_size, max_seq_len=engine.max_seq_len)
+    btables = np.zeros((batch, cache.max_blocks), np.int32)
+    worst = 0.0
+    with engine._mesh as mesh:
+        prefill_step = steps_lib.make_prefill_step(cfg, mesh)
+        decode_step = steps_lib.make_decode_step(cfg, mesh)
+        caches = model_lib.init_caches(cfg, batch, total, dtype=jnp.float32)
+        logits, caches = prefill_step(params, {"tokens": jnp.asarray(prompts)},
+                                      caches)
+        tok_ref = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        for i in range(batch):
+            _, k_l, v_l = engine._prefill(jnp.asarray(prompts[i: i + 1]))
+            cache.allocate(i, total)
+            cache.write_prefill(i, k_l[:, 0, :prompt_len],
+                                v_l[:, 0, :prompt_len])
+            btables[i] = cache.block_table_row(i)
+        tok_paged = tok_ref
+        for i in range(steps):
+            pos = prompt_len + i
+            ref_logits, caches = decode_step(params, tok_ref, caches,
+                                             jnp.int32(pos))
+            lg, k_pool, v_pool = engine._decode(
+                params, tok_paged, cache.k_pool, cache.v_pool,
+                jnp.asarray(btables), jnp.full((batch,), pos, jnp.int32),
+                jnp.ones((batch,), bool))
+            cache.sync_pools(k_pool, v_pool)
+            worst = max(worst, float(jnp.max(jnp.abs(
+                lg[:, 0] - ref_logits[:, 0]))))
+            tok_ref = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
+            tok_paged = jnp.argmax(lg[:, :1], axis=-1).astype(jnp.int32)
+    return worst
+
+
+class ServingEngine:
+    """Paged continuous/static batching over the backend/plan/grid stack."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 page_size: int = 8, num_pages: int | None = None,
+                 max_seq_len: int = 64, backend: str | None = None,
+                 plan=None, bits: int = 4, grid: tuple[int, int] | None = None,
+                 unit_n: int = 64, num_units: int = 64,
+                 pricing_design: str | None = None, prompt_seed: int = 0):
+        if cfg.attention != "gqa" or cfg.ssm is not None or cfg.rwkv is not None \
+                or cfg.family not in ("dense", "audio", "vlm") or cfg.is_moe:
+            raise ValueError(
+                "ServingEngine supports the dense GQA transformer family "
+                f"(got family={cfg.family!r}, attention={cfg.attention!r})")
+        if backend is not None and plan is not None:
+            raise ValueError("pass either backend= or plan=, not both")
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.page_size = page_size
+        self.max_seq_len = max_seq_len
+        self.backend = backend
+        self.plan = plan
+        self.bits = bits
+        self.grid = grid
+        self.prompt_seed = prompt_seed
+        blocks_per_req = -(-max_seq_len // page_size)
+        # default pool: every slot can hold a worst-case request, +1 trash page
+        self.num_pages = (1 + max_batch * blocks_per_req
+                          if num_pages is None else num_pages)
+        design = pricing_design or backend or "tubgemm"
+        self.energy = EnergyModel(cfg, params, design=design, bits=bits,
+                                  unit_n=unit_n, num_units=num_units, grid=grid)
+        self._mesh = make_grid_mesh(*grid) if grid else single_device_mesh()
+        self._decode = jax.jit(self._decode_fn)
+        self._prefill_fns: dict[int, object] = {}
+
+    # -- jitted model steps ---------------------------------------------------
+
+    def _decode_fn(self, params, tokens, k_pool, v_pool, block_tables,
+                   lengths, active):
+        """One ragged decode step for the whole batch.
+
+        tokens (B, 1) int32; pools (L, P, page, KVH, hd); block_tables
+        (B, max_blocks) int32; lengths (B,) int32 — each slot's own position
+        for the incoming token; active (B,) bool.  Mirrors
+        ``blocks._transformer_block`` exactly (sites, scopes, op order) with
+        the contiguous ``dynamic_update_slice`` cache swapped for the paged
+        scatter/gather path.
+        """
+        cfg = self.cfg
+        x = model_lib.embed_in(params, cfg, tokens)          # (B, 1, D)
+        x = jnp.where(active[:, None, None], x, jnp.zeros((), x.dtype))
+        positions = lengths[:, None].astype(jnp.int32)
+
+        def body(carry, xs):
+            xh = carry
+            lp, pk, pv = xs
+            with site_scope("layers"):
+                h = rmsnorm(lp["ln1"], xh, cfg.rms_eps)
+                with site_scope("attn"):
+                    q = dense(lp["attn"]["wq"], h, cfg, name="wq")
+                    k = dense(lp["attn"]["wk"], h, cfg, name="wk")
+                    v = dense(lp["attn"]["wv"], h, cfg, name="wv")
+                    q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+                    k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+                    pk = paged_lib.write_kv_token(pk, block_tables, lengths,
+                                                  k[:, 0], self.page_size)
+                    pv = paged_lib.write_kv_token(pv, block_tables, lengths,
+                                                  v[:, 0], self.page_size)
+                    out = paged_lib.paged_decode_attention(
+                        q, pk, pv, block_tables, lengths + 1,
+                        num_heads=cfg.num_heads)
+                    out = attn_lib._out_proj(lp["attn"], out, cfg)
+                xh = xh + out
+                h2 = rmsnorm(lp["ln2"], xh, cfg.rms_eps)
+                with site_scope("mlp"):
+                    xh = xh + mlp_fwd(lp["mlp"], h2, cfg)
+            return xh, (pk, pv)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["layers"], k_pool, v_pool))
+        logits = model_lib.logits_out(params, cfg, x)
+        return logits, new_k, new_v
+
+    def _prefill(self, tokens):
+        """(1, S) padded prompt -> (logits, stacked K, stacked V)."""
+        s = tokens.shape[1]
+        fn = self._prefill_fns.get(s)
+        if fn is None:
+            cfg = self.cfg
+
+            def prefill_fn(params, toks):
+                caches = model_lib.init_caches(cfg, 1, toks.shape[1],
+                                               dtype=jnp.float32)
+                logits, new = model_lib.prefill(params, cfg, toks,
+                                                caches=caches)
+                return logits, new["attn"]["k"], new["attn"]["v"]
+
+            fn = self._prefill_fns[s] = jax.jit(prefill_fn)
+        return fn(self.params, tokens)
+
+    # -- host-side serving loop -----------------------------------------------
+
+    def prompt_tokens(self, req: TrafficRequest) -> np.ndarray:
+        """Deterministic synthetic prompt for a request (seeded per id)."""
+        rng = np.random.default_rng([self.prompt_seed, req.req_id])
+        return rng.integers(0, self.cfg.vocab_size,
+                            req.prompt_len).astype(np.int32)
+
+    def _scope(self):
+        if self.plan is not None:
+            return backends_lib.use_plan(self.plan, grid=self.grid)
+        if self.backend is not None:
+            return backends_lib.use_backend(self.backend, bits=self.bits,
+                                            grid=self.grid)
+        return contextlib.nullcontext()
+
+    def run(self, trace: tuple[TrafficRequest, ...],
+            scheduler: str | _SchedulerBase = "continuous") -> ServingReport:
+        """Serve ``trace`` to completion; returns the metrics report.
+
+        Per step: (1) one jitted decode step advances every running request
+        by a token (finished ones are evicted at the boundary: pages freed,
+        slot zeroed); (2) the scheduler admits arrivals into freed slots —
+        admitted requests prefill now (their first token counts this step)
+        and join decode from the next step.
+        """
+        if not trace:
+            raise ValueError("empty traffic trace")
+        if isinstance(scheduler, str):
+            scheduler = make_scheduler(scheduler, self.max_batch)
+        if scheduler.max_batch != self.max_batch:
+            raise ValueError("scheduler.max_batch != engine max_batch")
+        cfg = self.cfg
+        cache = PagedKVCache(
+            num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+            head_dim=cfg.resolved_head_dim, num_pages=self.num_pages,
+            page_size=self.page_size, max_seq_len=self.max_seq_len)
+        for req in trace:
+            if req.total_len > cache.max_seq_len:
+                raise ValueError(f"request {req.req_id} needs {req.total_len} "
+                                 f"positions > max_seq_len {cache.max_seq_len}")
+            if cache.pages_needed(req.total_len) > cache.allocator.capacity:
+                raise ValueError(f"request {req.req_id} can never be admitted: "
+                                 f"needs {cache.pages_needed(req.total_len)} "
+                                 f"pages, pool holds {cache.allocator.capacity}")
+
+        b = self.max_batch
+        tokens = np.zeros(b, np.int64)
+        lengths = np.zeros(b, np.int64)
+        active = np.zeros(b, bool)
+        btables = np.zeros((b, cache.max_blocks), np.int32)
+        slot_req: list[Request | None] = [None] * b
+
+        waiting = deque(Request(spec=r)
+                        for r in sorted(trace, key=lambda r: (r.arrival_step,
+                                                              r.req_id)))
+        finished: list[Request] = []
+        events: list[tuple[int, str, int]] = []
+        req_tokens: dict[int, list[int]] = {r.req_id: [] for r in trace}
+        tokens_total = 0
+        energy_uj = 0.0
+        decode_ticks = 0
+        decoded_slots = 0
+        step = 0
+        max_steps = (max(r.arrival_step for r in trace)
+                     + 2 * sum(r.output_len + 1 for r in trace) + 16)
+
+        def finish(req: Request, at: int, slot: int) -> None:
+            req.state = RequestState.FINISHED
+            req.finish_step = at
+            cache.free_request(req.req_id)
+            slot_req[slot] = None
+            active[slot] = False
+            tokens[slot] = 0
+            lengths[slot] = 0
+            btables[slot] = 0
+            finished.append(req)
+            events.append((at, "evict", req.req_id))
+
+        def admit(req: Request, at: int) -> None:
+            spec = req.spec
+            cache.allocate(spec.req_id, spec.total_len)
+            prompt = self.prompt_tokens(spec)
+            padded = np.zeros((1, _bucket(spec.prompt_len)), np.int32)
+            padded[0, : spec.prompt_len] = prompt
+            logits, k_l, v_l = self._prefill(jnp.asarray(padded))
+            cache.write_prefill(spec.req_id,
+                                k_l[:, 0, : spec.prompt_len],
+                                v_l[:, 0, : spec.prompt_len])
+            first = int(jnp.argmax(logits[0, spec.prompt_len - 1]))
+            slot = next(i for i in range(b) if slot_req[i] is None)
+            slot_req[slot] = req
+            tokens[slot] = first
+            lengths[slot] = spec.prompt_len
+            active[slot] = True
+            btables[slot] = cache.block_table_row(spec.req_id)
+            req.state = RequestState.RUNNING
+            req.admitted_step = at
+            req.slot = slot
+            req.generated = 1
+            req_tokens[spec.req_id].append(first)
+            events.append((at, "admit", spec.req_id))
+            nonlocal tokens_total, energy_uj
+            tokens_total += 1
+            energy_uj += self.energy.prefill_energy_uj(spec.prompt_len)
+            if req.generated >= spec.output_len:
+                finish(req, at, slot)
+
+        with self._mesh, self._scope():
+            while waiting or any(active):
+                if step > max_steps:
+                    raise RuntimeError("serving loop exceeded its step bound "
+                                       "— scheduler stuck?")
+                # 1) decode the running set (admitted before this step)
+                n_active = int(active.sum())
+                if n_active:
+                    logits, k_pool, v_pool = self._decode(
+                        self.params, jnp.asarray(tokens[:, None], jnp.int32),
+                        cache.k_pool, cache.v_pool, jnp.asarray(btables),
+                        jnp.asarray(lengths, jnp.int32), jnp.asarray(active))
+                    cache.sync_pools(k_pool, v_pool)
+                    nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                    decode_ticks += 1
+                    decoded_slots += n_active
+                    energy_uj += self.energy.decode_energy_uj(n_active)
+                    for slot in range(b):
+                        req = slot_req[slot]
+                        if req is None:
+                            continue
+                        lengths[slot] += 1          # KV written for the input
+                        cache.lengths[req.req_id] = int(lengths[slot])
+                        tokens[slot] = int(nxt[slot])
+                        req.generated += 1
+                        req_tokens[req.req_id].append(int(nxt[slot]))
+                        tokens_total += 1
+                        if req.generated >= req.spec.output_len:
+                            finish(req, step, slot)
+                # 2) step boundary: admit arrivals (join decode next step)
+                for req in scheduler.admissions(step, list(waiting),
+                                                int(active.sum()), cache):
+                    waiting.remove(req)
+                    admit(req, step)
+                step += 1
+
+        lat = np.array([r.latency for r in finished])
+        qd = np.array([r.queue_delay for r in finished])
+        return ServingReport(
+            scheduler=scheduler.name,
+            requests=len(finished),
+            tokens=tokens_total,
+            steps=step,
+            throughput_tok_per_step=tokens_total / max(step, 1),
+            latency_p50=float(np.percentile(lat, 50)),
+            latency_p99=float(np.percentile(lat, 99)),
+            queue_delay_mean=float(qd.mean()),
+            occupancy=decoded_slots / max(decode_ticks * b, 1),
+            energy_uj=energy_uj,
+            energy_per_token_uj=energy_uj / max(tokens_total, 1),
+            design=self.energy.design,
+            bits=self.bits,
+            max_batch=b,
+            page_size=self.page_size,
+            num_pages=self.num_pages,
+            events=tuple(events),
+            latencies=tuple(int(v) for v in lat),
+            request_tokens={k: tuple(v) for k, v in req_tokens.items()},
+        )
