@@ -36,6 +36,7 @@ BENCH_SPECS: list[tuple[str, str, str, dict]] = [
     ("plan", "benchmarks.plan_bench", "plan", {}),
     ("serving", "benchmarks.serving_bench", "serving", {}),
     ("grid", "benchmarks.grid_bench", "grid", {}),
+    ("stochastic", "benchmarks.stochastic_bench", "stochastic", {}),
     ("ugemm_accuracy", "benchmarks.accuracy_bench", "ugemm_accuracy", {}),
     ("unary_engine_sweep", "benchmarks.accuracy_bench", "unary_engine_sweep", {}),
     ("kernel_micro", "benchmarks.accuracy_bench", "kernel_micro", {}),

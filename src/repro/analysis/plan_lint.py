@@ -18,7 +18,14 @@ anything:
 * ``acc-overflow`` — the assignment's recorded contraction geometry leaves
   the design's accumulator envelope (:mod:`repro.analysis.ranges`); for
   grid plans, per-shard entries check their shard-local K and aggregate
-  entries check the geometry's padded K split.
+  entries check the geometry's padded K split;
+* ``invalid-stream`` / ``stream-guard`` — stream-length hygiene for the
+  rate-coded ``ugemm_stochastic`` family: a stochastic entry must carry
+  ``stream_len >= 1`` (and no count-exact design may carry one), and its
+  analytic expected-error bound
+  (:func:`repro.analysis.ranges.stochastic_error_bound`) squared must stay
+  within the plan's recorded ``max_rel_mse`` accuracy guard — the same
+  pre-filter the planner applies, re-derived statically from the document.
 
 Site inventories come from the plan's own evidence by default (entries
 record ``k``/``n_out``), or from a model trace when the caller has one.
@@ -42,12 +49,50 @@ VALID_BITS = range(2, 9)
 
 
 def _known_designs() -> set[str]:
-    from repro.backends.registry import KERNEL_SIBLINGS
-    return set(gemm_sims.DESIGNS) | set(KERNEL_SIBLINGS)
+    from repro.backends.registry import KERNEL_SIBLINGS, STOCHASTIC_DESIGN
+    return set(gemm_sims.DESIGNS) | set(KERNEL_SIBLINGS) | {STOCHASTIC_DESIGN}
+
+
+def _stream_findings(entry: SiteAssignment, *, where: str,
+                     max_rel_mse: float | None) -> list[Finding]:
+    """``invalid-stream`` / ``stream-guard`` rules for one entry."""
+    from repro.backends.registry import STOCHASTIC_DESIGN
+    out: list[Finding] = []
+    is_stochastic = ranges.design_family(entry.design) == STOCHASTIC_DESIGN
+    if not is_stochastic:
+        if entry.stream_len:
+            out.append(Finding(
+                pass_name="plan-lint", rule="invalid-stream", severity=ERROR,
+                where=where,
+                message=f"stream_len={entry.stream_len} on count-exact "
+                        f"design {entry.design!r} — stream length is a "
+                        f"{STOCHASTIC_DESIGN!r} knob"))
+        return out
+    if entry.stream_len < 1:
+        out.append(Finding(
+            pass_name="plan-lint", rule="invalid-stream", severity=ERROR,
+            where=where,
+            message=f"stochastic entry needs stream_len >= 1, got "
+                    f"{entry.stream_len}"))
+        return out
+    if max_rel_mse is not None and not entry.guard_relaxed \
+            and entry.bits in VALID_BITS:
+        bound = ranges.stochastic_error_bound(entry.bits, entry.stream_len)
+        if bound.expected_rel_mse > float(max_rel_mse):
+            out.append(Finding(
+                pass_name="plan-lint", rule="stream-guard", severity=ERROR,
+                where=where,
+                message=f"{bound.describe()} — expected stream error "
+                        f"(rel MSE {bound.expected_rel_mse:.4f}) alone "
+                        f"violates the plan's accuracy guard "
+                        f"max_rel_mse={float(max_rel_mse)}; lengthen the "
+                        f"stream or drop the entry"))
+    return out
 
 
 def _entry_findings(entry: SiteAssignment, *, where: str,
-                    k_override: int | None = None) -> list[Finding]:
+                    k_override: int | None = None,
+                    max_rel_mse: float | None = None) -> list[Finding]:
     out: list[Finding] = []
     if entry.design not in _known_designs():
         out.append(Finding(
@@ -68,10 +113,12 @@ def _entry_findings(entry: SiteAssignment, *, where: str,
             message=f"assignment shipped with the accuracy guard relaxed "
                     f"(rel_mse={entry.rel_mse:.4f}); quantization error "
                     f"exceeded the planning threshold at every bit-width"))
+    out.extend(_stream_findings(entry, where=where, max_rel_mse=max_rel_mse))
     k = entry.k if k_override is None else k_override
     if k and entry.design in _known_designs() \
             and entry.bits in VALID_BITS:
-        f = ranges.check_gemm(entry.design, entry.bits, int(k), where=where)
+        f = ranges.check_gemm(entry.design, entry.bits, int(k), where=where,
+                              stream_len=entry.stream_len or None)
         if f is not None:
             out.append(f)
     return out
@@ -149,11 +196,13 @@ def lint_backend_plan(plan: BackendPlan, *,
                       k_override: int | None = None) -> list[Finding]:
     """All findings for one flat :class:`BackendPlan`."""
     out: list[Finding] = []
+    max_rel_mse = plan.metadata().get("max_rel_mse")
     for i, entry in enumerate(plan.sites):
         where = (f"{where_prefix}sites[{i}] {entry.pattern!r} "
                  f"-> {entry.design}@{entry.bits}b")
         out.extend(_entry_findings(entry, where=where,
-                                   k_override=k_override))
+                                   k_override=k_override,
+                                   max_rel_mse=max_rel_mse))
     out.extend(_pattern_findings(plan, site_names=site_names,
                                  where_prefix=where_prefix))
     return out
@@ -170,12 +219,14 @@ def lint_grid_plan(plan: GridPlan, *,
         out.extend(lint_backend_plan(shard_plan, site_names=None,
                                      where_prefix=f"shard {key}/"))
     agg = plan.aggregate
+    max_rel_mse = agg.metadata().get("max_rel_mse")
     for i, entry in enumerate(agg.sites):
         where = (f"aggregate sites[{i}] {entry.pattern!r} "
                  f"-> {entry.design}@{entry.bits}b "
                  f"[grid {plan.units_x}x{plan.units_y}]")
         k_shard = -(-int(entry.k) // plan.units_x) if entry.k else 0
-        out.extend(_entry_findings(entry, where=where, k_override=k_shard))
+        out.extend(_entry_findings(entry, where=where, k_override=k_shard,
+                                   max_rel_mse=max_rel_mse))
     out.extend(_pattern_findings(agg, site_names=site_names,
                                  where_prefix="aggregate "))
     return out

@@ -65,10 +65,16 @@ class GemmBackend:
     # designs and for registry-resolved mirrors, whose knobs are baked in).
     block: tuple | None = None
     interpret: bool | None = None
+    # Rate-coded stream length (the ``ugemm_stochastic`` family's
+    # accuracy/energy knob); None for every count-exact design.
+    stream_len: int | None = None
 
     def __post_init__(self) -> None:
         if self.bits < 2:
             raise ValueError(f"bits must be >= 2, got {self.bits}")
+        if self.stream_len is not None and self.stream_len < 1:
+            raise ValueError(
+                f"stream_len must be >= 1, got {self.stream_len}")
 
     # -- execution ----------------------------------------------------------
 
@@ -107,10 +113,29 @@ class GemmBackend:
 
     def _guard_envelope(self, k: int) -> None:
         """Static numeric-safety check (see ``repro.analysis.ranges``)."""
-        ranges.assert_within_envelope(self.pricing_design, self.bits,
-                                      int(k), where=f"backend {self.name}")
+        # Stream-coded backends check their own stream-aware envelope (the
+        # per-step count is the stream length, not the pricing design's
+        # 2^bits slots); everything else checks as the design it prices as.
+        design = self.name if self.stream_len is not None \
+            else self.pricing_design
+        ranges.assert_within_envelope(design, self.bits, int(k),
+                                      where=f"backend {self.name}",
+                                      stream_len=self.stream_len)
 
     # -- cost ---------------------------------------------------------------
+
+    @property
+    def cycle_scale(self) -> float:
+        """Per-tile cycle multiplier vs ``pricing_design``'s wc formula.
+
+        1.0 for every design priced under its own name.  The stochastic
+        family prices as uGEMM (identical rate-coded datapath power;
+        k-independent cycles) with ``stream_len / 2^bits`` scaling — energy
+        and latency are linear in slot count.
+        """
+        if self.stream_len is None:
+            return 1.0
+        return self.stream_len / float(2 ** self.bits)
 
     def cycles(self, common_dim: int) -> int:
         """Worst-case clock cycles for one GEMM streaming over ``common_dim``."""

@@ -66,9 +66,13 @@ class SiteAssignment:
     — predicted DLA cost (µJ / µs, Eq. 1-scaled dyn vs worst case);
     ``rel_mse`` — the accuracy guard's statistic: per-output-channel
     quantization MSE of the site's weight at ``bits``, relative to the
-    weight's mean square (dimensionless; 0 = lossless);
+    weight's mean square (dimensionless; 0 = lossless; for stochastic
+    entries it also folds in the measured stream-error variance);
     ``guard_relaxed`` — True when every candidate bit-width violated the
-    guard and the planner fell back to the most accurate one.
+    guard and the planner fell back to the most accurate one;
+    ``stream_len`` — rate-coded stream length for ``ugemm_stochastic``
+    entries (0 = not a stream-coded entry, the count-exact default — old
+    serialized plans load unchanged).
     """
 
     pattern: str
@@ -87,12 +91,22 @@ class SiteAssignment:
     wc_latency_us: float = 0.0
     rel_mse: float = 0.0
     guard_relaxed: bool = False
+    stream_len: int = 0
 
     def backend(self) -> GemmBackend:
         """Resolve the entry's engine as a typed ``GemmBackend``."""
         from repro.backends.registry import resolve  # lazy: avoids an
         # import cycle through repro.configs (see runtime.py's note)
-        return resolve(self.design, bits=self.bits)
+        return resolve(self.design, bits=self.bits,
+                       stream_len=self.stream_len or None)
+
+    @property
+    def engine_label(self) -> str:
+        """``design@bits`` plus a ``:L`` stream suffix for stochastic
+        entries — the display/matching tag of the *engine*, not just the
+        design."""
+        base = f"{self.design}@{self.bits}"
+        return f"{base}:{self.stream_len}" if self.stream_len else base
 
     def matches(self, site: str) -> bool:
         return fnmatch.fnmatchcase(site, self.pattern)
@@ -144,6 +158,14 @@ class BackendPlan:
     def distinct_backends(self) -> tuple[tuple[str, int], ...]:
         """Sorted unique (design, bits) pairs the plan assigns."""
         return tuple(sorted({(s.design, s.bits) for s in self.sites}))
+
+    def distinct_engines(self) -> tuple[tuple[str, int, int], ...]:
+        """Sorted unique (design, bits, stream_len) triples — the full
+        engine identity (two stochastic entries with different stream
+        lengths are different engines; stream_len is 0 for count-exact
+        designs)."""
+        return tuple(sorted({(s.design, s.bits, s.stream_len)
+                             for s in self.sites}))
 
     def metadata(self) -> dict:
         return dict(self.meta)

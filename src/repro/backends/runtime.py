@@ -64,7 +64,8 @@ class ExecutedGemm:
     ``m``/``k``/``n_out`` — the contraction ``(m, k) @ (k, n_out)``;
     ``backend``/``bits`` — the engine that site ran on; ``site`` — the
     site name per the module-level naming contract (``""`` for un-named
-    ``dense`` calls outside any :func:`site_scope`).
+    ``dense`` calls outside any :func:`site_scope`); ``stream_len`` — the
+    rate-coded stream length for stochastic engines (0 = count-exact).
     """
 
     m: int
@@ -73,6 +74,7 @@ class ExecutedGemm:
     backend: str
     bits: int
     site: str = ""
+    stream_len: int = 0
 
 
 class BackendExecution:
@@ -94,8 +96,9 @@ class BackendExecution:
     def record(self, site: str, m: int, k: int, n_out: int,
                backend: GemmBackend) -> None:
         """Append one traced GEMM site to ``calls``."""
-        self.calls.append(ExecutedGemm(int(m), int(k), int(n_out),
-                                       backend.name, backend.bits, str(site)))
+        self.calls.append(ExecutedGemm(
+            int(m), int(k), int(n_out), backend.name, backend.bits,
+            str(site), int(getattr(backend, "stream_len", 0) or 0)))
 
     def observe(self, site: str, m: int, k: int, n_out: int) -> None:
         """Called by ``dense`` for sites the scope maps to NO backend.
@@ -231,18 +234,22 @@ def _pushed(execution: BackendExecution):
 
 @contextlib.contextmanager
 def use_backend(spec: str | GemmBackend, *, bits: int | None = None,
-                block=None, interpret: bool | None = None, grid=None):
+                block=None, interpret: bool | None = None,
+                stream_len: int | None = None, grid=None):
     """Execute every ``dense`` contraction in the block on ``spec``.
 
-    Args as :func:`repro.backends.resolve`, plus ``grid`` — an optional
-    (units_x, units_y) tuple or ``"X,Y"`` string that wraps the resolved
-    backend in a :class:`~repro.backends.grid.GridBackend`, so every dense
-    contraction is sharded across the PE-array grid under ``shard_map``.
-    Yields the scope's :class:`BackendExecution` (``.backend``, ``.calls``).
-    Scopes nest — the innermost wins — and unwind correctly on exceptions.
+    Args as :func:`repro.backends.resolve` (``stream_len`` selects the
+    stochastic family's rate-coded stream length), plus ``grid`` — an
+    optional (units_x, units_y) tuple or ``"X,Y"`` string that wraps the
+    resolved backend in a :class:`~repro.backends.grid.GridBackend`, so
+    every dense contraction is sharded across the PE-array grid under
+    ``shard_map``.  Yields the scope's :class:`BackendExecution`
+    (``.backend``, ``.calls``).  Scopes nest — the innermost wins — and
+    unwind correctly on exceptions.
     """
     from repro.backends.registry import resolve
-    backend = resolve(spec, bits=bits, block=block, interpret=interpret)
+    backend = resolve(spec, bits=bits, block=block, interpret=interpret,
+                      stream_len=stream_len)
     if grid is not None:
         from repro.backends.grid import as_grid, parse_grid
         backend = as_grid(backend, *parse_grid(grid))
@@ -273,7 +280,8 @@ def _validate_plan_envelopes(plan, grid: tuple[int, int] | None) -> None:
             try:
                 ranges.assert_within_envelope(
                     entry.design, entry.bits, k_local,
-                    where=f"{label} entry {entry.pattern!r}")
+                    where=f"{label} entry {entry.pattern!r}",
+                    stream_len=getattr(entry, "stream_len", 0) or None)
             except KeyError:
                 continue
 

@@ -142,10 +142,15 @@ def price_workload(calls: list[GemmCall], design="tubgemm",
     if grid is None:
         grid = getattr(backend, "grid", None)
     design, bits = backend.pricing_design, backend.bits
+    # Stream-coded backends price as their pricing design with a per-tile
+    # cycle multiplier (stream_len / 2^bits); 1.0 for everything else.
+    cycle_scale = float(getattr(backend, "cycle_scale", 1.0))
     if grid is not None:
         return _price_grid(calls, design, bits, unit_n, num_units,
-                           int(grid[0]), int(grid[1]))
-    dla = ppa.DLAModel(design=design, bits=bits, n=unit_n, num_units=num_units)
+                           int(grid[0]), int(grid[1]),
+                           cycle_scale=cycle_scale)
+    dla = ppa.DLAModel(design=design, bits=bits, n=unit_n,
+                       num_units=num_units, cycle_scale=cycle_scale)
     wc_ns = dyn_ns = wc_nj = dyn_nj = 0.0
     per_layer: dict[str, tuple[float, float]] = {}
     macs = 0
@@ -171,11 +176,12 @@ def price_workload(calls: list[GemmCall], design="tubgemm",
 
 
 def _price_grid(calls: list[GemmCall], design: str, bits: int, unit_n: int,
-                num_units: int, units_x: int, units_y: int) -> GridCost:
+                num_units: int, units_x: int, units_y: int, *,
+                cycle_scale: float = 1.0) -> GridCost:
     """The grid branch of :func:`price_workload` (same contract)."""
     gdla = ppa.GridDLAModel(design=design, bits=bits, n=unit_n,
                             num_units=num_units, units_x=units_x,
-                            units_y=units_y)
+                            units_y=units_y, cycle_scale=cycle_scale)
     wc_ns = dyn_ns = wc_nj = dyn_nj = hop_nj = hop_ns = 0.0
     per_layer: dict[str, tuple[float, float]] = {}
     macs = padded_macs = 0

@@ -269,6 +269,12 @@ class DLAModel:
     bits: int = 4
     n: int = 128              # PE array size (CloudTPUv3-like default)
     num_units: int = 1
+    # Per-tile cycle multiplier for designs whose slot count deviates from
+    # the named design's wc_cycles formula.  The rate-coded stochastic
+    # family prices as uGEMM (same datapath power, k-independent cycles)
+    # scaled by stream_len / 2^bits — energy and latency are linear in
+    # cycles, so one factor covers both.
+    cycle_scale: float = 1.0
 
     def tiles(self, m: int, n_out: int) -> int:
         """Number of n x n output tiles a (m, n_out) result decomposes into."""
@@ -278,7 +284,8 @@ class DLAModel:
                           bit_sparsity: float = 0.0) -> float:
         """End-to-end (m, k) @ (k, n_out) latency in **ns**: per-tile latency
         (common_dim = k, Eq. 1 scaled) x ceil(tiles / num_units) waves."""
-        per_tile = latency_ns(self.design, self.bits, k, bit_sparsity)
+        per_tile = latency_ns(self.design, self.bits, k, bit_sparsity) \
+            * self.cycle_scale
         waves = math.ceil(self.tiles(m, n_out) / self.num_units)
         return per_tile * waves
 
@@ -287,7 +294,7 @@ class DLAModel:
         """Total matmul energy in **nJ**: per-tile energy x tile count
         (independent of num_units — parallel units burn the same total)."""
         per_tile = energy_nj(self.design, self.bits, self.n, common_dim=k,
-                             bit_sparsity=bit_sparsity)
+                             bit_sparsity=bit_sparsity) * self.cycle_scale
         return per_tile * self.tiles(m, n_out)
 
     @property
@@ -316,6 +323,7 @@ class GridDLAModel:
     num_units: int = 1
     units_x: int = 1          # K-dim partitions (partial-sum reduction)
     units_y: int = 1          # N-dim partitions (disjoint column slices)
+    cycle_scale: float = 1.0  # see DLAModel.cycle_scale
 
     def __post_init__(self) -> None:
         if self.units_x < 1 or self.units_y < 1:
@@ -329,7 +337,8 @@ class GridDLAModel:
     def node(self) -> DLAModel:
         """The per-shard single-chip cost model."""
         return DLAModel(design=self.design, bits=self.bits, n=self.n,
-                        num_units=self.num_units)
+                        num_units=self.num_units,
+                        cycle_scale=self.cycle_scale)
 
     def shard_dims(self, k: int, n_out: int) -> tuple[int, int]:
         """Per-shard (k, n_out) after the ceil-split (padded rows/cols)."""

@@ -28,6 +28,7 @@ __all__ = [
     "fake_quant",
     "quantize_per_channel",
     "quantize_per_tensor",
+    "quantize_per_row",
 ]
 
 
@@ -121,6 +122,24 @@ def quantize_per_channel(x: jax.Array, bits: int = 8) -> Quantized:
 
 def quantize_per_tensor(x: jax.Array, bits: int = 8) -> Quantized:
     return quantize(x, bits=bits, per_channel=False)
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_per_row(x: jax.Array, bits: int = 8) -> Quantized:
+    """Symmetric absmax quantization with one scale per *row* (axis=-1
+    reduced).
+
+    For a ``(rows, k)`` activation batch each row gets its own scale, so
+    one row's outlier magnitude cannot coarsen another row's grid — the
+    per-row option ``models/common.dense`` uses to make co-batched serve
+    traffic rows independent (``quantize(per_channel=True)`` reduces over
+    all-but-last axis, i.e. per *column*, which is the weight convention,
+    not this).  At a single row this is exactly per-tensor quantization.
+    """
+    scale = _absmax_scale(x, bits, axes=(x.ndim - 1,))
+    q = jnp.clip(jnp.round(x / scale), -vmax(bits), vmax(bits))
+    return Quantized(values=q.astype(jnp.int8),
+                     scale=scale.astype(jnp.float32), bits=bits)
 
 
 def dequantize(q: Quantized) -> jax.Array:

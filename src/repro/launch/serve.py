@@ -92,19 +92,23 @@ def build_workload(cfg, params, batch: int, ctx_len: int, bits: int):
 
 
 def validate_backend_numerics(params, design, bits: int | None = None,
-                              n_tiles: int = 8, tile: int = 16) -> float:
+                              n_tiles: int = 8, tile: int = 16,
+                              oracle: str = "bgemm") -> float:
     """Spot-check the selected GEMM backend on tiles of the real weights.
 
     Quantizes ``n_tiles`` (tile x tile) slices of actual model weights,
     stacks them on a batch axis, and pushes the whole stack through
-    ``GemmBackend.execute`` in one batched call against the binary oracle.
-    ``design`` is a backend name or ``repro.backends.GemmBackend`` (``bits``
-    then defaults to the backend's own width).  Exact designs (tu/tub/b and
-    the Pallas mirrors) must come back bit-identical — returns 0.0 — while
-    uGEMM reports its stochastic relative RMSE.
+    ``GemmBackend.execute`` in one batched call against the ``oracle``
+    design (binary by default).  ``design`` is a backend name or
+    ``repro.backends.GemmBackend`` (``bits`` then defaults to the backend's
+    own width).  Exact designs (tu/tub/b and the Pallas mirrors) must come
+    back bit-identical — returns 0.0 — while uGEMM reports its stochastic
+    relative RMSE.  Rate-coded stochastic backends are judged with
+    ``oracle="ugemm"`` — the exact uGEMM value their bitstreams converge to
+    at L=2^bits — so the number isolates the *stream-length* error.
     """
     backend = backends_lib.resolve(design, bits=bits)
-    oracle = backends_lib.resolve("bgemm", bits=backend.bits)
+    oracle = backends_lib.resolve(oracle, bits=backend.bits)
     leaves = [l for l in jax.tree_util.tree_leaves(params)
               if hasattr(l, "ndim") and l.ndim >= 2 and l.size >= 2 * tile * tile]
     if not leaves:
@@ -122,6 +126,16 @@ def validate_backend_numerics(params, design, bits: int | None = None,
     a = jnp.stack(tiles[:n_tiles])
     b = jnp.stack(tiles[n_tiles:])
     return gemm_sims_lib.rel_rmse(backend.execute(a, b), oracle.execute(a, b))
+
+
+def _oracle_for(backend) -> str:
+    """The oracle design a backend's numerics are judged against.
+
+    Rate-coded stochastic backends carry a ``stream_len`` and converge to
+    the exact uGEMM value, so that is their reference; everything else is
+    checked against the binary int32 oracle.
+    """
+    return "ugemm" if getattr(backend, "stream_len", None) else "bgemm"
 
 
 def measure_decode_cycles(cfg, params, backend, *, batch: int, unit_n: int,
@@ -232,12 +246,14 @@ def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
     ref = np.asarray(ref_logits, np.float32)
     got = np.asarray(exec_logits, np.float32)
     agree = float(np.mean(np.argmax(got, -1) == np.argmax(ref, -1)))
+    oracle = _oracle_for(backend)
     return {
         "backend": backend,
         "tokens": tokens,
         "sites": len(execution.calls),
         "wall_s": wall,
-        "rel_rmse": validate_backend_numerics(params, backend),
+        "oracle": oracle,
+        "rel_rmse": validate_backend_numerics(params, backend, oracle=oracle),
         "drift": gemm_sims_lib.rel_rmse(got, ref),
         "top1_agreement": agree,
         "cycles": measure_decode_cycles(cfg, params, backend,
@@ -277,16 +293,21 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
         raise RuntimeError(
             "plan execution contracted no GEMM sites — do the plan's "
             "patterns match this model's site names?")
-    site_backends = {c.site: f"{c.backend}@{c.bits}" for c in execution.calls}
+    site_backends = {
+        c.site: f"{c.backend}@{c.bits}"
+        + (f":{c.stream_len}" if getattr(c, "stream_len", 0) else "")
+        for c in execution.calls}
     rel_rmse = {}
-    for design, bits in entry_plan.distinct_backends():
-        tag = f"{design}@{bits}"
+    for design, bits, stream_len in entry_plan.distinct_engines():
+        tag = f"{design}@{bits}" + (f":{stream_len}" if stream_len else "")
         if not any(tag == t for t in site_backends.values()):
             continue
-        backend = backends_lib.resolve(design, bits=bits)
+        backend = backends_lib.resolve(design, bits=bits,
+                                       stream_len=stream_len or None)
         if grid:
             backend = backends_lib.as_grid(backend, *grid)
-        rel_rmse[tag] = validate_backend_numerics(params, backend)
+        rel_rmse[tag] = validate_backend_numerics(
+            params, backend, oracle=_oracle_for(backend))
     ref = np.asarray(ref_logits, np.float32)
     got = np.asarray(exec_logits, np.float32)
     meta = entry_plan.metadata()
@@ -318,12 +339,31 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
     }
 
 
+def _parse_stream_lens(spec: str | None) -> tuple[int, ...]:
+    """``"16,32,64"`` -> ``(16, 32, 64)`` (empty/None -> no stochastic)."""
+    if not spec:
+        return ()
+    try:
+        lens = tuple(int(tok) for tok in spec.split(",") if tok.strip())
+    except ValueError:
+        raise SystemExit(f"error: --stream-lens must be a comma-separated "
+                         f"list of ints, got {spec!r}")
+    if any(L < 1 for L in lens):
+        raise SystemExit(f"error: stream lengths must be >= 1, got {spec!r}")
+    return lens
+
+
 def run_plan_mode(args, cfg, params) -> int:
     """``serve plan``: derive, save and report a mixed-precision plan."""
     site_list = planner_lib.discover_sites(cfg, params, batch=args.batch)
+    stream_lens = _parse_stream_lens(args.stream_lens)
+    designs = planner_lib.DEFAULT_DESIGNS
+    if stream_lens:
+        designs = designs + (planner_lib.STOCHASTIC_DESIGN,)
     plan = planner_lib.build_plan(
         cfg, params, batch=args.batch, unit_n=args.unit_n,
-        num_units=args.units, sites=site_list)
+        num_units=args.units, sites=site_list, designs=designs,
+        stream_lens=stream_lens)
     path = plan.save(args.plan_out)
     meta = plan.metadata()
     totals = meta["totals"]
@@ -332,12 +372,12 @@ def run_plan_mode(args, cfg, params) -> int:
     print(f"\n=== backend plan for {args.arch} "
           f"({args.units}x {args.unit_n}x{args.unit_n} units, objective "
           f"{meta['objective']}) ===")
-    print(f"{'site':>24s} {'backend':>12s} {'b_spa':>6s} {'dynE_uJ':>9s} "
+    print(f"{'site':>24s} {'engine':>20s} {'b_spa':>6s} {'dynE_uJ':>9s} "
           f"{'relMSE':>7s} {'measured_cyc':>13s} {'wc_cyc':>10s}")
     for e in plan.sites:
         cyc = planner_lib.measure_site_cycles(
             sites[e.pattern], e, unit_n=args.unit_n, num_units=args.units)
-        print(f"{e.pattern:>24s} {e.design + '@' + str(e.bits):>12s} "
+        print(f"{e.pattern:>24s} {e.engine_label:>20s} "
               f"{e.bit_blockmax:6.3f} {e.dyn_energy_uj:9.4f} "
               f"{e.rel_mse:7.4f} {cyc['measured']:13.1f} {cyc['wc']:10.1f}")
     planned = totals["planned"]
@@ -354,9 +394,9 @@ def run_plan_mode(args, cfg, params) -> int:
             / max(totals["uniform"][best]["dyn_energy_uj"], 1e-30)
         print(f"plan vs best uniform ({best}): {saving:.2%} predicted "
               f"energy saving")
-    distinct = plan.distinct_backends()
-    print(f"distinct backends chosen: "
-          f"{', '.join(f'{d}@{b}' for d, b in distinct)} "
+    distinct = plan.distinct_engines()
+    print(f"distinct engines chosen: "
+          f"{', '.join(f'{d}@{b}' + (f':{L}' if L else '') for d, b, L in distinct)} "
           f"({'mixed' if len(distinct) > 1 else 'uniform'} assignment)")
     print(analysis_verdict(plan, site_names=[s.name for s in site_list]))
     print(f"plan saved to {path} (replay: serve --arch {args.arch}"
@@ -441,16 +481,20 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
     and Eq.-1 energy per token for both.  Gates (non-zero exit) on:
 
     * continuous throughput >= static throughput on the same trace,
-    * both schedulers completing every request; on the float path the
-      per-request token streams must also be identical across schedulers
-      (under --execute-backend/--backend-plan they are reported but not
-      gated: the per-tensor activation-quantization scale spans the whole
-      decode batch, so a request's tokens legitimately depend on which
-      requests it is co-batched with),
+    * both schedulers completing every request; the per-request token
+      streams must also be identical across schedulers — a strict gate on
+      the float path and, under --execute-backend/--backend-plan, whenever
+      ``--act-scale per-row`` is active (per-row activation quantization
+      makes each request's integer codes a pure function of its own
+      tokens).  Only under backend execution with the default per-tensor
+      scale is the identity check informational: that scale spans the
+      whole decode batch, so a request's tokens legitimately depend on
+      which requests it is co-batched with,
     * the paged decode step staying bit-exact with the contiguous
       ``decode_step`` reference at fp32 (skipped under --grid: the sharded
       variant is covered by the tier-1 subprocess tests).
     """
+    from repro.models import common as common_lib
     if args.execute_backend and plan is not None:
         print("error: serve traffic takes --execute-backend OR "
               "--backend-plan, not both")
@@ -471,8 +515,9 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
           f"(Poisson rate {args.arrival_rate}/step, seed {args.seed}), "
           f"{args.batch} slots, {engine.num_pages} pages x {args.page_size} "
           f"slots, {scope}, energy priced on {engine.energy.design} ===")
-    reports = {name: engine.run(trace, name)
-               for name in ("continuous", "static")}
+    with common_lib.activation_scaling(args.act_scale):
+        reports = {name: engine.run(trace, name)
+                   for name in ("continuous", "static")}
     print(f"{'scheduler':>12s} {'reqs':>5s} {'tokens':>7s} {'steps':>6s} "
           f"{'tok/step':>9s} {'p50':>6s} {'p99':>7s} {'queue':>6s} "
           f"{'occup':>6s} {'uJ/tok':>9s}")
@@ -493,12 +538,15 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
     complete = (rc.requests == len(trace) == rs.requests)
     same_tokens = rc.request_tokens == rs.request_tokens
     quantized = args.execute_backend or plan is not None
-    note = (" (informational: per-tensor act-quant couples co-batched rows)"
-            if quantized else "")
+    strict = (not quantized) or args.act_scale == "per-row"
+    note = ("" if not quantized else
+            " (strict: per-row act-quant decouples co-batched rows)"
+            if strict else
+            " (informational: per-tensor act-quant couples co-batched rows)")
     print(f"all {len(trace)} requests completed under both schedulers: "
           f"{complete}; per-request token streams identical: "
           f"{same_tokens}{note}")
-    ok = ok and complete and (same_tokens or quantized)
+    ok = ok and complete and (same_tokens or not strict)
     if grid is None:
         diff = paged_vs_contiguous_probe(cfg, params,
                                          page_size=args.page_size)
@@ -527,11 +575,13 @@ def main() -> int:
     ap.add_argument("--gemm-backend", default="tubgemm",
                     choices=["ugemm", "tugemm", "tubgemm", "bgemm"],
                     help="design the pricing table highlights")
-    ap.add_argument("--execute-backend", default=None,
-                    choices=list(backends_lib.available()),
+    ap.add_argument("--execute-backend", default=None, metavar="SPEC",
                     help="also EXECUTE prefill/decode with every quantized "
                          "dense layer contracted on this backend "
-                         "(simulated design or *_pallas kernel mirror)")
+                         "(simulated design, *_pallas kernel mirror, or a "
+                         "rate-coded spec like 'ugemm_stochastic:64' where "
+                         ":L overrides the stream length); one of "
+                         f"{', '.join(backends_lib.available())}")
     ap.add_argument("--backend-plan", default=None, metavar="FILE",
                     help="execute prefill/decode with every dense site "
                          "contracted on the backend its plan entry names "
@@ -539,6 +589,17 @@ def main() -> int:
                          "benchmarks.run plan)")
     ap.add_argument("--plan-out", default="reports/plan.json",
                     help="where 'serve plan' saves the derived plan")
+    ap.add_argument("--stream-lens", default=None, metavar="L1,L2,...",
+                    help="[plan] admit rate-coded ugemm_stochastic "
+                         "candidates at these stream lengths, making "
+                         "(design, bits, stream_len) the planned assignment "
+                         "(e.g. --stream-lens 16,32,64,128)")
+    ap.add_argument("--act-scale", default="per-tensor",
+                    choices=["per-tensor", "per-row"],
+                    help="[traffic] activation quantization granularity "
+                         "under backend execution; per-row decouples "
+                         "co-batched requests and turns the identical-"
+                         "token-stream check into a strict gate")
     ap.add_argument("--bits", type=int, default=4, choices=[2, 4, 8])
     ap.add_argument("--unit-n", type=int, default=128)
     ap.add_argument("--units", type=int, default=64)
@@ -565,6 +626,14 @@ def main() -> int:
                          "device_count=N)")
     args = ap.parse_args()
 
+    if args.execute_backend:
+        # No argparse choices= — the spec grammar ("ugemm_stochastic:64")
+        # is the registry's; let resolve() validate it once, up front.
+        try:
+            backends_lib.resolve(args.execute_backend, bits=args.bits)
+        except (KeyError, ValueError) as exc:
+            print(f"error: --execute-backend {args.execute_backend!r}: {exc}")
+            return 2
     grid = backends_lib.parse_grid(args.grid) if args.grid else None
     plan = None
     if args.backend_plan and args.mode != "plan":
@@ -653,12 +722,14 @@ def main() -> int:
     # --- end-to-end execution on the chosen backend -------------------------
     if args.execute_backend:
         backend = backends_lib.resolve(args.execute_backend, bits=args.bits)
+        stream_len = getattr(backend, "stream_len", None)
         if grid is not None:
             backend = backends_lib.as_grid(backend, *grid)
         gtag = (f" on a {grid[0]}x{grid[1]} grid (shard_map, psum over k)"
                 if grid else "")
+        ltag = f", L={stream_len} bitstreams" if stream_len else ""
         print(f"\n=== executing model on {backend.name} "
-              f"({backend.bits}-bit int tiles){gtag} ===")
+              f"({backend.bits}-bit int tiles{ltag}){gtag} ===")
         result = run_backend_execution(
             cfg, params, mesh, prompt, backend, args.tokens,
             unit_n=args.unit_n, num_units=args.units, stats=stats)
@@ -668,18 +739,22 @@ def main() -> int:
         tag = ("bit-exact" if result["rel_rmse"] == 0.0
                else f"relRMSE {result['rel_rmse']:.2e}")
         kind = "exact design" if backend.exact else "stochastic design"
-        print(f"int GEMMs vs binary oracle: {tag} ({kind})")
+        oracle = ("exact-uGEMM oracle" if result["oracle"] == "ugemm"
+                  else "binary oracle")
+        print(f"int GEMMs vs {oracle}: {tag} ({kind})")
         print(f"output drift vs float model (prefill logits): "
               f"relRMSE {result['drift']:.3f}, "
               f"top-1 agreement {result['top1_agreement']:.1%}")
         cyc = result["cycles"]
         in_bounds = cyc["dyn_floor"] - 0.5 <= cyc["measured"] <= cyc["wc"] + 0.5
         priced_dyn = costs[backend.pricing_design].dyn_latency_us * 1e3 \
-            / ppa.CLOCK_PERIOD_NS
+            / ppa.CLOCK_PERIOD_NS * getattr(backend, "cycle_scale", 1.0)
+        stag = (f", measured stream relRMSE {result['rel_rmse']:.2e} at "
+                f"L={stream_len}" if stream_len else "")
         print(f"per-decode-token cycles ({args.units}x {args.unit_n}x"
               f"{args.unit_n} units): measured {cyc['measured']:.3e} within "
               f"[dyn floor {cyc['dyn_floor']:.3e}, wc {cyc['wc']:.3e}]: "
-              f"{in_bounds} (priced Eq.1 dyn {priced_dyn:.3e})")
+              f"{in_bounds} (priced Eq.1 dyn {priced_dyn:.3e}{stag})")
         if not in_bounds:
             print("WARNING: measured cycles outside the priced dyn/wc bounds")
             return 1
@@ -687,11 +762,13 @@ def main() -> int:
     # --- end-to-end execution on a per-site mixed-precision plan ------------
     if args.backend_plan:
         is_grid = isinstance(plan, backends_lib.GridPlan)
-        distinct = plan.distinct_backends()
+        distinct = (plan.aggregate if is_grid else plan).distinct_engines()
         gtag = (f" on a {plan.units_x}x{plan.units_y} grid" if is_grid
                 else "")
+        labels = ", ".join(f"{d}@{b}" + (f":{L}" if L else "")
+                           for d, b, L in distinct)
         print(f"\n=== executing model on backend plan {args.backend_plan}"
-              f"{gtag} ({', '.join(f'{d}@{b}' for d, b in distinct)}) ===")
+              f"{gtag} ({labels}) ===")
         print(analysis_verdict(plan))
         result = run_plan_execution(cfg, params, mesh, prompt, plan,
                                     args.tokens)
@@ -705,8 +782,9 @@ def main() -> int:
             design = tag.split("@")[0]
             exact = backends_lib.resolve(design).exact
             label = "bit-exact" if rel == 0.0 else f"relRMSE {rel:.2e}"
-            oracle = ("unsharded binary oracle" if is_grid
-                      else "binary oracle")
+            oracle = "exact-uGEMM oracle" if ":" in tag else "binary oracle"
+            if is_grid:
+                oracle = "unsharded " + oracle
             print(f"int GEMMs vs {oracle} on {tag}: {label}")
             if exact and rel != 0.0:
                 ok = False

@@ -17,13 +17,14 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.quantization import Quantized, quantize
+from repro.core.quantization import Quantized, quantize, quantize_per_row
 from repro.models.config import ModelConfig
 
 __all__ = [
     "ParamDef", "init_tree", "pspec_tree", "DEFAULT_RULES",
     "shard", "dense", "rmsnorm", "RMS_SCALE_INIT",
     "embed_lookup", "logits_from_embedding", "dtype_of",
+    "activation_scaling", "activation_scale_mode",
 ]
 
 # ---------------------------------------------------------------------------
@@ -232,6 +233,43 @@ def dtype_of(name: str):
 
 
 # ---------------------------------------------------------------------------
+# Activation quantization granularity (backend-execution scopes)
+# ---------------------------------------------------------------------------
+
+#: Granularities ``_backend_matmul`` accepts for the activation operand.
+_ACT_SCALE_MODES = ("per-tensor", "per-row")
+
+
+@contextlib.contextmanager
+def activation_scaling(mode: str):
+    """Select the activation quantization granularity for backend execution.
+
+    ``"per-tensor"`` (default) — one absmax scale across the whole
+    activation batch, the paper's INT-inference convention; co-batched rows
+    share a grid, so a request's integer codes depend on its batchmates.
+    ``"per-row"`` — one scale per activation row, making each co-batched
+    request's codes a pure function of its own tokens (the property the
+    serving engine's identical-token-stream check needs to be a *strict*
+    gate under backend execution).  Read at trace time, like the backend
+    scopes — trace jitted steps inside the context.
+    """
+    if mode not in _ACT_SCALE_MODES:
+        raise ValueError(f"activation scaling mode must be one of "
+                         f"{_ACT_SCALE_MODES}, got {mode!r}")
+    prev = getattr(_TLS, "act_scale", "per-tensor")
+    _TLS.act_scale = mode
+    try:
+        yield
+    finally:
+        _TLS.act_scale = prev
+
+
+def activation_scale_mode() -> str:
+    """The granularity ``_backend_matmul`` quantizes activations at now."""
+    return getattr(_TLS, "act_scale", "per-tensor")
+
+
+# ---------------------------------------------------------------------------
 # Layers
 # ---------------------------------------------------------------------------
 
@@ -298,8 +336,9 @@ def _backend_matmul(execution, backend, site: str, w: jax.Array,
 
     Both operands are quantized at the backend's bit-width — the hardware
     units consume w-bit codes on both ports — weights per output channel,
-    activations per tensor; the integer result is rescaled by both
-    quantization scales and cast back to the activation dtype.  The
+    activations per tensor by default or per row under
+    ``activation_scaling("per-row")``; the integer result is rescaled by
+    both quantization scales and cast back to the activation dtype.  The
     activation streams as the temporal operand (orientation does not change
     the integer result; cycle accounting prices the weight-streamed
     schedule, see ``launch/serve.py``).
@@ -307,7 +346,11 @@ def _backend_matmul(execution, backend, site: str, w: jax.Array,
     w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
     x2 = x.reshape(-1, x.shape[-1])
     wq = quantize(w2.astype(jnp.float32), bits=backend.bits)
-    xq = quantize(x2.astype(jnp.float32), bits=backend.bits, per_channel=False)
+    if activation_scale_mode() == "per-row":
+        xq = quantize_per_row(x2.astype(jnp.float32), bits=backend.bits)
+    else:
+        xq = quantize(x2.astype(jnp.float32), bits=backend.bits,
+                      per_channel=False)
     out = backend.execute(xq.values, wq.values)
     out = out.astype(jnp.float32) * (xq.scale * wq.scale.reshape(1, -1))
     execution.record(site, m=x2.shape[0], k=w2.shape[0], n_out=w2.shape[1],

@@ -1,0 +1,36 @@
+"""Stream-faithful stochastic uGEMM: rate-coded bitstream compute.
+
+The paper's uGEMM hardware is *stochastic*: operands become rate-coded
+bitstreams (a value is the probability that a stream bit is 1), a multiply
+is a per-cycle AND/XNOR gate, and accuracy is bought with stream length.
+The repo's ``core.gemm_sims.ugemm_exact`` idealizes that to closed-form
+slot counts; this package keeps the bitstreams, so *stream length* joins
+bit-width as a plannable accuracy/energy knob.
+
+Modules
+-------
+``gen``
+    Vectorized bitstream generation (UnarySim's RNG / SourceGen / BSGen
+    split): seeded Sobol and LFSR integer sequences, probability
+    pre-scaling to comparator thresholds, unipolar + bipolar formats, and
+    ``lax.scan`` per-cycle references tested bit-identical to the
+    vectorized forms.
+``sgemm``
+    The rate-coded GEMM engine (``stochastic_gemm``) with UnaryLinear
+    scaled accumulation, and the pure ``DesignSpec`` factory behind
+    ``repro.backends.resolve("ugemm_stochastic", bits=..., stream_len=...)``.
+``error``
+    Measured per-site RMSE-vs-exact-uGEMM curves over stream length — the
+    planner's stream-length accuracy-guard statistic (the analytic
+    expected/tail envelope lives in ``repro.analysis.ranges``).
+"""
+
+from repro.stochastic import error, gen, sgemm
+from repro.stochastic.sgemm import (STOCHASTIC_DESIGN, default_stream_len,
+                                    stochastic_design_spec, stochastic_gemm)
+
+__all__ = [
+    "gen", "sgemm", "error",
+    "STOCHASTIC_DESIGN", "default_stream_len", "stochastic_design_spec",
+    "stochastic_gemm",
+]

@@ -1,0 +1,76 @@
+"""Measured accuracy of the stochastic engine vs exact uGEMM.
+
+``eval.planner`` plans ``(design, bits, stream_len)`` assignments; the
+stream-length axis needs an accuracy statistic per site.  This module
+provides the *measured* side: seeded, deterministic RMSE-vs-exact-uGEMM
+curves over stream length, evaluated on a site's actual quantized weight
+codes against seeded calibration activations.  The *analytic* expected and
+tail envelopes (closed-form, used by the planner's pre-filter and by
+``plan-lint``) live in ``repro.analysis.ranges.stochastic_error_bound`` so
+the static-analysis layer stays JAX-free.
+
+Everything here keys off ``(seed, bits, stream_len)`` only — the same
+inputs always produce the same curve, which is what lets the benchmark
+gate on exact monotonicity.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import gemm_sims
+from repro.core.quantization import quantize, vmax
+from repro.stochastic import sgemm
+
+__all__ = [
+    "calibration_codes", "measured_rel_rmse", "rmse_curve", "site_rmse_curve",
+]
+
+
+def calibration_codes(rows: int, cols: int, bits: int, *,
+                      seed: int = 0) -> np.ndarray:
+    """Deterministic uniform integer codes in ``[-vmax, vmax]``."""
+    rng = np.random.default_rng(seed)
+    v = vmax(bits)
+    return rng.integers(-v, v + 1, size=(rows, cols)).astype(np.int32)
+
+
+def measured_rel_rmse(a, b, bits: int, stream_len: int, *,
+                      seed: int = 0, rng_kind: str = "sobol") -> float:
+    """Relative RMSE of the stochastic engine against ``ugemm_exact``."""
+    est = sgemm.stochastic_gemm(a, b, bits, stream_len=stream_len, seed=seed,
+                                rng_kind=rng_kind)
+    oracle = gemm_sims.ugemm_exact(a, b, bits=bits)
+    return gemm_sims.rel_rmse(est, oracle)
+
+
+def rmse_curve(bits: int, stream_lens, *, m: int = 8, k: int = 64,
+               n: int = 32, seed: int = 0,
+               rng_kind: str = "sobol") -> list[tuple[int, float]]:
+    """``(stream_len, rel_rmse)`` pairs on seeded calibration operands."""
+    a = calibration_codes(m, k, bits, seed=seed)
+    b = calibration_codes(k, n, bits, seed=seed + 1)
+    return [(int(L), measured_rel_rmse(a, b, bits, int(L), seed=seed,
+                                       rng_kind=rng_kind))
+            for L in stream_lens]
+
+
+def site_rmse_curve(weight, bits: int, stream_lens, *, rows: int = 4,
+                    max_cols: int = 64, seed: int = 0,
+                    rng_kind: str = "sobol") -> list[tuple[int, float]]:
+    """Per-site curve: the site's real weight, seeded activations.
+
+    ``weight`` is the float ``(k, n_out)`` site matrix; it is quantized
+    per output channel at ``bits`` — the same codes backend execution
+    contracts — and multiplied by ``rows`` seeded calibration activations.
+    ``max_cols`` caps the measured output columns to bound planner cost
+    (error statistics are column-stationary).
+    """
+    w = np.asarray(weight, np.float32)
+    cols = min(w.shape[1], max_cols)
+    wq = quantize(w[:, :cols], bits=bits)
+    b = np.asarray(wq.values, np.int32)
+    a = calibration_codes(rows, w.shape[0], bits, seed=seed)
+    return [(int(L), measured_rel_rmse(a, b, bits, int(L), seed=seed,
+                                       rng_kind=rng_kind))
+            for L in stream_lens]

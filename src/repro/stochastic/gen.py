@@ -1,0 +1,325 @@
+"""Vectorized unary bitstream generation (UnarySim RNG / SourceGen / BSGen).
+
+The UnarySim hardware decomposition (SNIPPETS.md snippets 1-2) splits a
+bitstream source into three stages, all kept here:
+
+* **RNG** — a shared pseudo-random *integer* sequence ``r[t] in [0, 2^bits)``
+  per cycle: a Sobol low-discrepancy sequence (the uGEMM paper's choice) or
+  a maximal-length Fibonacci LFSR.
+* **SourceGen** — probability pre-scaling: a value is converted ONCE to an
+  integer comparator threshold ``tau = round(p * 2^bits)`` (unipolar) or
+  ``round((x+1)/2 * 2^bits)`` (bipolar) so the per-cycle datapath is
+  integer-only.
+* **BSGen** — the per-cycle comparator ``bit[t] = r[t] < tau``.
+
+Everything is **seeded and deterministic**: sequences derive from a
+SplitMix-style integer hash of ``(seed, dim, period)`` — no global RNG
+state, identical output on every host.  Operand decorrelation comes from
+*distinct Sobol dimensions* (distinct generator matrices), not from
+shifting one sequence: XOR-scrambles of a single dimension stay perfectly
+correlated under AND, which would compute ``min`` rather than a product.
+
+Two execution forms are provided and tested bit-identical:
+
+* the **vectorized** form — the whole ``(L, ...)`` bitstream tensor from
+  one broadcast comparator, feeding ``einsum`` contractions in ``sgemm``;
+* the **scan reference** — a ``lax.scan`` that re-derives each ``r[t]``
+  from the cycle counter (Sobol: XOR-fold of direction numbers over the
+  counter's set bits; LFSR: stepping the shift register), the
+  hardware-faithful slow path.
+
+Sobol sequences use *binary* (non-Gray) indexing: the first ``2^l`` points
+of each dimension are then a stratified ``(0, l, 1)``-net and the first
+full period ``2^bits`` is a permutation of ``[0, 2^bits)`` — which is what
+makes unipolar decode exact at ``L = 2^bits`` (every threshold ``tau``
+fires exactly ``tau`` slots per period).  Streams longer than one period
+re-scramble each period with a fresh XOR digital shift (a bijection, so
+the permutation property survives).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "SOBOL_DIMS", "LFSR_TAPS",
+    "sobol_direction_numbers", "sobol_sequence", "lfsr_sequence",
+    "rng_sequence", "rng_sequence_scan",
+    "source_gen", "source_gen_codes", "decode_counts",
+    "bsgen", "bsgen_scan", "unipolar_and", "bipolar_xnor",
+]
+
+_M64 = (1 << 64) - 1
+
+
+def _hash64(*keys: int) -> int:
+    """Deterministic 64-bit mix of integer keys (SplitMix64 finalizer)."""
+    h = 0x9E3779B97F4A7C15
+    for k in keys:
+        h = (h ^ (int(k) & _M64)) * 0xBF58476D1CE4E5B9 & _M64
+        h ^= h >> 27
+        h = h * 0x94D049BB133111EB & _M64
+        h ^= h >> 31
+    return h
+
+
+# ---------------------------------------------------------------------------
+# RNG stage: Sobol direction numbers + LFSR taps
+# ---------------------------------------------------------------------------
+
+#: Joe-Kuo primitive-polynomial parameters ``(s, a, m_init)`` per Sobol
+#: dimension.  Dimension 0 is the degenerate bit-reversal (van der Corput
+#: base 2) dimension; its generator matrix is the identity.
+SOBOL_DIMS: tuple[tuple[int, int, tuple[int, ...]], ...] = (
+    (0, 0, ()),                 # dim 0: van der Corput
+    (1, 0, (1,)),               # dim 1
+    (2, 1, (1, 3)),             # dim 2
+    (3, 1, (1, 3, 1)),          # dim 3
+    (3, 2, (1, 1, 1)),          # dim 4
+    (4, 1, (1, 1, 3, 3)),       # dim 5
+    (4, 4, (1, 3, 5, 13)),      # dim 6
+    (5, 2, (1, 1, 5, 5, 17)),   # dim 7
+)
+
+#: Maximal-length Fibonacci LFSR tap positions (1-indexed, MSB first) per
+#: register width; period ``2^bits - 1`` (the all-zero state never occurs).
+LFSR_TAPS: dict[int, tuple[int, ...]] = {
+    2: (2, 1), 3: (3, 2), 4: (4, 3), 5: (5, 3),
+    6: (6, 5), 7: (7, 6), 8: (8, 6, 5, 4),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def sobol_direction_numbers(bits: int, dim: int) -> tuple[int, ...]:
+    """Direction numbers ``v_j`` (``j = 0..bits-1``) for one Sobol dimension.
+
+    ``v_j = m_j << (bits - 1 - j)`` with odd ``m_j < 2^(j+1)``, so the
+    generator matrix is unit upper triangular — each dimension's first
+    ``2^bits`` points are a permutation of ``[0, 2^bits)``.
+    """
+    if not 0 <= dim < len(SOBOL_DIMS):
+        raise ValueError(f"sobol dim {dim} not in [0, {len(SOBOL_DIMS)})")
+    if dim == 0:
+        return tuple(1 << (bits - 1 - j) for j in range(bits))
+    s, a, m_init = SOBOL_DIMS[dim]
+    m = list(m_init)
+    while len(m) < bits:
+        j = len(m)
+        val = m[j - s] ^ (m[j - s] << s)
+        for k in range(1, s):
+            if (a >> (s - 1 - k)) & 1:
+                val ^= m[j - k] << k
+        m.append(val)
+    return tuple(m[j] << (bits - 1 - j) for j in range(bits))
+
+
+def _period_masks(bits: int, dim: int, seed: int, periods: int) -> np.ndarray:
+    """XOR digital-shift masks, one per ``2^bits`` period of the stream."""
+    mask = (1 << bits) - 1
+    return np.asarray([_hash64(seed, dim, p) & mask for p in range(periods)],
+                      np.int32)
+
+
+def sobol_sequence(bits: int, length: int, *, dim: int = 0,
+                   seed: int = 0) -> np.ndarray:
+    """``length`` Sobol integers in ``[0, 2^bits)`` (binary indexing).
+
+    Each ``2^bits`` period is the full permutation, XOR-scrambled by a
+    per-``(seed, dim, period)`` digital shift.
+    """
+    period = 1 << bits
+    dirs = sobol_direction_numbers(bits, dim)
+    n = np.arange(period, dtype=np.int64)
+    base = np.zeros(period, np.int64)
+    for j in range(bits):
+        base ^= np.where((n >> j) & 1, dirs[j], 0)
+    masks = _period_masks(bits, dim, seed, -(-length // period))
+    out = (base[None, :] ^ masks[:, None].astype(np.int64)).reshape(-1)
+    return out[:length].astype(np.int32)
+
+
+def lfsr_sequence(bits: int, length: int, *, dim: int = 0,
+                  seed: int = 0) -> np.ndarray:
+    """``length`` states of a maximal Fibonacci LFSR in ``[1, 2^bits)``.
+
+    The register restarts from a fresh hashed nonzero state every
+    ``2^bits - 1`` cycles.  Unlike Sobol, the all-zero value never appears,
+    so unipolar decode carries an O(1/2^bits) bias — Sobol is the default
+    RNG; the LFSR is the cheap-hardware alternative.
+    """
+    if bits not in LFSR_TAPS:
+        raise ValueError(f"no maximal LFSR taps for bits={bits}")
+    taps = LFSR_TAPS[bits]
+    period = (1 << bits) - 1
+    out = np.empty(length, np.int32)
+    state = 0
+    for t in range(length):
+        if t % period == 0:
+            state = (_hash64(seed, dim, t // period) % period) + 1
+        out[t] = state
+        fb = 0
+        for pos in taps:
+            fb ^= (state >> (pos - 1)) & 1
+        state = ((state << 1) | fb) & ((1 << bits) - 1)
+    return out
+
+
+def rng_sequence(kind: str, bits: int, length: int, *, dim: int = 0,
+                 seed: int = 0) -> jax.Array:
+    """The shared RNG stage: ``(length,)`` int32 comparator inputs."""
+    if kind == "sobol":
+        seq = sobol_sequence(bits, length, dim=dim, seed=seed)
+    elif kind == "lfsr":
+        seq = lfsr_sequence(bits, length, dim=dim, seed=seed)
+    else:
+        raise ValueError(f"unknown RNG kind {kind!r} (sobol|lfsr)")
+    return jnp.asarray(seq, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Scan reference: re-derive r[t] from the cycle counter inside lax.scan
+# ---------------------------------------------------------------------------
+
+def _sobol_point(n: jax.Array, dirs: jax.Array, bits: int) -> jax.Array:
+    """XOR-fold of direction numbers over the set bits of counter ``n``."""
+    x = jnp.int32(0)
+    for j in range(bits):
+        x = x ^ jnp.where((n >> j) & 1 != 0, dirs[j], 0)
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "bits", "length", "dim",
+                                             "seed"))
+def rng_sequence_scan(kind: str, bits: int, length: int, *, dim: int = 0,
+                      seed: int = 0) -> jax.Array:
+    """Per-cycle ``lax.scan`` re-derivation of :func:`rng_sequence`.
+
+    The hardware-faithful slow path: Sobol points are rebuilt from the
+    cycle counter, the LFSR steps its register — tested bit-identical to
+    the vectorized host precomputation.
+    """
+    if kind == "sobol":
+        period = 1 << bits
+        dirs = jnp.asarray(sobol_direction_numbers(bits, dim), jnp.int32)
+        masks = jnp.asarray(_period_masks(bits, dim, seed,
+                                          -(-length // period)))
+
+        def step(n, _):
+            x = _sobol_point(n % period, dirs, bits) ^ masks[n // period]
+            return n + 1, x
+
+        _, seq = jax.lax.scan(step, jnp.int32(0), None, length=length)
+        return seq
+    if kind == "lfsr":
+        period = (1 << bits) - 1
+        taps = LFSR_TAPS[bits]
+        starts = jnp.asarray(
+            [(_hash64(seed, dim, p) % period) + 1
+             for p in range(-(-length // period))], jnp.int32)
+
+        def step(carry, _):
+            n, state = carry
+            state = jnp.where(n % period == 0, starts[n // period], state)
+            fb = jnp.int32(0)
+            for pos in taps:
+                fb = fb ^ ((state >> (pos - 1)) & 1)
+            nxt = ((state << 1) | fb) & ((1 << bits) - 1)
+            return (n + 1, nxt), state
+
+        _, seq = jax.lax.scan(step, (jnp.int32(0), jnp.int32(1)), None,
+                              length=length)
+        return seq
+    raise ValueError(f"unknown RNG kind {kind!r} (sobol|lfsr)")
+
+
+# ---------------------------------------------------------------------------
+# SourceGen: probability pre-scaling to integer thresholds
+# ---------------------------------------------------------------------------
+
+def source_gen(prob, bits: int, mode: str = "unipolar") -> jax.Array:
+    """Pre-scale values to integer comparator thresholds in ``[0, 2^bits]``.
+
+    * ``unipolar`` — ``prob`` holds probabilities in [0, 1];
+      ``tau = round(p * 2^bits)``.  The stream's 1-rate is ``tau / 2^bits``.
+    * ``bipolar`` — ``prob`` holds values in [-1, 1], mapped through
+      ``p = (x + 1) / 2`` first; decode is ``2 p - 1`` and multiplication
+      is XNOR (:func:`bipolar_xnor`).
+    """
+    p = jnp.asarray(prob, jnp.float32)
+    if mode == "bipolar":
+        p = (p + 1.0) * 0.5
+    elif mode != "unipolar":
+        raise ValueError(f"unknown mode {mode!r} (unipolar|bipolar)")
+    period = 1 << bits
+    return jnp.clip(jnp.round(p * period), 0, period).astype(jnp.int32)
+
+
+def source_gen_codes(mags, bits: int) -> jax.Array:
+    """SourceGen for the repo's signed-magnitude integer codes.
+
+    ``mags`` are magnitudes ``|q| in [0, vmax]`` (``vmax = 2^(bits-1)-1``);
+    the encoded probability is ``|q| / vmax`` and the returned threshold is
+    ``round(|q| * 2^bits / vmax)`` computed exactly in integers.
+    """
+    period = 1 << bits
+    v = (1 << (bits - 1)) - 1
+    m = jnp.asarray(mags, jnp.int32)
+    return (2 * m * period + v) // (2 * v)
+
+
+def decode_counts(counts, stream_len: int, mode: str = "unipolar"):
+    """Invert SourceGen: slot counts back to probabilities / values."""
+    p = jnp.asarray(counts, jnp.float32) / stream_len
+    return 2.0 * p - 1.0 if mode == "bipolar" else p
+
+
+# ---------------------------------------------------------------------------
+# BSGen: the per-cycle comparator
+# ---------------------------------------------------------------------------
+
+def bsgen(thresholds, rng_seq) -> jax.Array:
+    """Comparator bitstreams: ``bit[t, ...] = rng_seq[t] < thresholds[...]``.
+
+    Returns an int8 tensor of shape ``(len(rng_seq), *thresholds.shape)``
+    with values in {0, 1} — the whole stream from one broadcast compare.
+    """
+    tau = jnp.asarray(thresholds, jnp.int32)
+    seq = jnp.asarray(rng_seq, jnp.int32)
+    seq = seq.reshape((seq.shape[0],) + (1,) * tau.ndim)
+    return (seq < tau[None]).astype(jnp.int8)
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "bits", "length", "dim",
+                                             "seed"))
+def bsgen_scan(thresholds, *, kind: str, bits: int, length: int,
+               dim: int = 0, seed: int = 0) -> jax.Array:
+    """Per-cycle BSGen: RNG stepping and comparison inside one ``lax.scan``.
+
+    The slow reference for :func:`bsgen` ∘ :func:`rng_sequence` — one
+    comparator evaluation per cycle, as the hardware would issue them.
+    """
+    tau = jnp.asarray(thresholds, jnp.int32)
+    seq = rng_sequence_scan(kind, bits, length, dim=dim, seed=seed)
+
+    def step(t, _):
+        return t + 1, (seq[t] < tau).astype(jnp.int8)
+
+    _, bits_out = jax.lax.scan(step, jnp.int32(0), None, length=length)
+    return bits_out
+
+
+def unipolar_and(bit_a, bit_b) -> jax.Array:
+    """Unipolar multiply: AND gate (``p_out = p_a * p_b`` for independent
+    streams)."""
+    return jnp.asarray(bit_a) * jnp.asarray(bit_b)
+
+
+def bipolar_xnor(bit_a, bit_b) -> jax.Array:
+    """Bipolar multiply: XNOR gate (``x_out = x_a * x_b`` in value space)."""
+    a = jnp.asarray(bit_a)
+    b = jnp.asarray(bit_b)
+    return (1 - (a ^ b)).astype(jnp.int8)

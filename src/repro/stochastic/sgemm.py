@@ -1,0 +1,188 @@
+"""Rate-coded stochastic GEMM: the ``ugemm_stochastic`` design family.
+
+``stochastic_gemm`` multiplies signed-magnitude integer codes the way the
+paper's uGEMM hardware does — as rate-coded bitstreams — instead of the
+closed-form slot counts of ``core.gemm_sims.ugemm_exact``:
+
+1. **SourceGen** maps each magnitude to a comparator threshold
+   (``gen.source_gen_codes``).
+2. **BSGen** turns thresholds into ``stream_len``-cycle bitstreams against
+   *distinct Sobol dimensions* per operand (dim 0 for A, dim 1 for B —
+   shared-sequence XOR shifts would stay correlated under AND and compute
+   ``min`` rather than a product).
+3. The per-cycle **AND** products are accumulated over cycles *and* the
+   common dimension by an exact integer adder tree (one ``einsum`` with
+   int32 accumulation — bit products are in {-1, 0, 1}, so counts are
+   exact while ``stream_len * k < 2^31``).
+4. Decode scales counts by ``vmax^2 / stream_len`` (sign-magnitude, the
+   same convention as ``ugemm_exact``).
+
+Stream length ``L`` is the engine's accuracy/energy knob: the error
+against exact uGEMM falls roughly as ``1/L`` (Sobol pairing — see
+``repro.analysis.ranges.stochastic_error_bound``) while worst-case cycles
+are exactly ``L`` per outer-product slot structure, independent of the
+common dimension (every k-lane streams in parallel into the adder tree,
+as in uGEMM).
+
+:func:`scaled_output_stream` additionally models UnarySim's *UnaryLinear*
+scaled accumulation — folding the per-cycle popcount of ``k`` product bits
+back into a single rate-coded output stream with ``acc_bound`` /
+``offset`` bookkeeping — for stream-faithful layer composition; the GEMM
+decode path above uses the parallel counter read-out.
+
+:func:`stochastic_design_spec` packages the engine as a *pure*
+``DesignSpec`` (no registry mutation — the same closure pattern as the
+Pallas kernel mirrors), which ``repro.backends.resolve`` exposes as
+``resolve("ugemm_stochastic", bits=..., stream_len=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gemm_sims
+from repro.core.quantization import vmax
+from repro.stochastic import gen
+
+__all__ = [
+    "STOCHASTIC_DESIGN", "default_stream_len", "stochastic_gemm",
+    "stochastic_gemm_stream", "stochastic_design_spec",
+    "UnaryLinearAcc", "scaled_output_stream",
+]
+
+#: The design-family name ``repro.backends.resolve`` accepts (optionally
+#: spelled ``"ugemm_stochastic:<stream_len>"``).
+STOCHASTIC_DESIGN = "ugemm_stochastic"
+
+
+def default_stream_len(bits: int) -> int:
+    """One full RNG period — the stream length exact uGEMM implicitly uses."""
+    return 2 ** bits
+
+
+def _bitstreams(codes, bits: int, stream_len: int, *, dim: int, seed: int,
+                rng_kind: str) -> jax.Array:
+    """Signed bitstreams: BSGen on |codes| times the code's sign.
+
+    Shape ``(stream_len, *codes.shape)`` int8 in {-1, 0, 1}; the sign rides
+    along so one integer contraction accumulates signed counts.
+    """
+    q = jnp.asarray(codes, jnp.int32)
+    tau = gen.source_gen_codes(jnp.abs(q), bits)
+    seq = gen.rng_sequence(rng_kind, bits, stream_len, dim=dim, seed=seed)
+    return gen.bsgen(tau, seq) * jnp.sign(q).astype(jnp.int8)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "stream_len", "seed", "rng_kind"))
+def stochastic_gemm(a, b, bits: int = 8, *, stream_len: int | None = None,
+                    seed: int = 0, rng_kind: str = "sobol") -> jax.Array:
+    """Rate-coded GEMM of signed integer codes ``a @ b``.
+
+    ``a``: ``(m, k)``; ``b``: ``(k, n)``; both with entries in
+    ``[-vmax(bits), vmax(bits)]``.  Returns float32 decoded estimates; the
+    contraction itself is an exact int32 count.
+    """
+    if stream_len is None:
+        stream_len = default_stream_len(bits)
+    at = _bitstreams(a, bits, stream_len, dim=0, seed=seed, rng_kind=rng_kind)
+    bt = _bitstreams(b, bits, stream_len, dim=1, seed=seed, rng_kind=rng_kind)
+    counts = jnp.einsum("tmk,tkn->mn", at, bt,
+                        preferred_element_type=jnp.int32)
+    v = vmax(bits)
+    return counts.astype(jnp.float32) * (v * v / stream_len)
+
+
+def stochastic_gemm_stream(a, b, bits: int = 8, *,
+                           stream_len: int | None = None, seed: int = 0,
+                           rng_kind: str = "sobol"):
+    """Streamed form: ``(estimate, cycles)`` — cycles is the stream length."""
+    if stream_len is None:
+        stream_len = default_stream_len(bits)
+    est = stochastic_gemm(a, b, bits, stream_len=stream_len, seed=seed,
+                          rng_kind=rng_kind)
+    return est, stream_len
+
+
+def stochastic_design_spec(stream_len: int, *, seed: int = 0,
+                           rng_kind: str = "sobol") -> gemm_sims.DesignSpec:
+    """A pure ``DesignSpec`` for one ``(stream_len, seed, rng)`` engine.
+
+    Constructed per-backend (never registered in the global design
+    registry — the ``source-lint`` registry-mutation rule); worst-case
+    cycles are ``stream_len`` regardless of the common dimension, mirroring
+    uGEMM's k-independent ``2^bits``.
+    """
+    if stream_len < 1:
+        raise ValueError(f"stream_len must be >= 1, got {stream_len}")
+
+    def exact_fn(a, b, bits):
+        return stochastic_gemm(a, b, bits, stream_len=stream_len, seed=seed,
+                               rng_kind=rng_kind)
+
+    def stream_fn(a, b, bits):
+        return stochastic_gemm_stream(a, b, bits, stream_len=stream_len,
+                                      seed=seed, rng_kind=rng_kind)
+
+    return gemm_sims.DesignSpec(
+        name=STOCHASTIC_DESIGN,
+        exact_fn=exact_fn,
+        stream_fn=stream_fn,
+        wc_cycles_fn=lambda bits, common_dim: stream_len,
+        sparsity_aware=False,
+        exact=False,
+    )
+
+
+# ---------------------------------------------------------------------------
+# UnaryLinear scaled accumulation (UnarySim's output-stream regeneration)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class UnaryLinearAcc:
+    """UnaryLinear accumulation bookkeeping (UnarySim conventions).
+
+    ``acc_bound`` is the scaled-addition divisor (number of summed input
+    streams, +1 when a bias stream joins); ``offset`` recenters bipolar
+    sums so the output stream stays a valid rate code.
+    """
+
+    in_features: int
+    bias: bool = False
+    bipolar: bool = False
+
+    @property
+    def acc_bound(self) -> int:
+        return self.in_features + (1 if self.bias else 0)
+
+    @property
+    def offset(self) -> float:
+        if not self.bipolar:
+            return 0.0
+        return (self.in_features - 1) / 2 + (0.5 if self.bias else 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("acc",))
+def scaled_output_stream(product_bits, acc: UnaryLinearAcc) -> jax.Array:
+    """Fold per-cycle product bits into one scaled rate-coded output stream.
+
+    ``product_bits``: ``(L, ..., in_features)`` bits in {0, 1}.  Each cycle
+    adds the popcount across ``in_features`` into a running accumulator and
+    emits one output bit whenever it crosses ``acc_bound`` — a rate divider
+    whose output 1-rate converges to ``sum_k p_k / acc_bound`` (plus the
+    bipolar ``offset`` recentering).  Returns int8 ``(L, ...)`` bits.
+    """
+    psum = jnp.sum(jnp.asarray(product_bits, jnp.int32), axis=-1)
+
+    def step(carry, s):
+        carry = carry + s
+        bit = (carry >= acc.acc_bound).astype(jnp.int8)
+        return carry - bit.astype(jnp.int32) * acc.acc_bound, bit
+
+    init = jnp.zeros(psum.shape[1:], jnp.int32)
+    _, out = jax.lax.scan(step, init, psum)
+    return out

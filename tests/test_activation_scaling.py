@@ -1,0 +1,103 @@
+"""Per-row activation quantization: ``quantize_per_row`` and the
+``models.common.activation_scaling`` scope.
+
+The serving engine's identical-token-stream gate can only be strict under
+backend execution if a request's integer codes are a pure function of its
+own tokens — i.e. one absmax scale per activation *row*, not one spanning
+the whole co-batched tensor.  These tests pin the axis semantics (per-row
+vs the per-column weight convention), the batch-1 bit-exact equivalence
+with per-tensor scaling, and the batch independence the strict gate needs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import backends
+from repro.core.quantization import quantize, quantize_per_row, vmax
+from repro.models import common
+
+
+def _acts(rows, k, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(rows, k)), jnp.float32)
+
+
+def test_per_row_axis_semantics():
+    # Row 1 carries a 100x outlier: per-row scaling must leave row 0's grid
+    # untouched, per-tensor coarsens both.
+    x = jnp.asarray([[0.5, -0.25, 0.125, 0.0625],
+                     [100.0, -50.0, 25.0, 12.5]], jnp.float32)
+    q = quantize_per_row(x, bits=8)
+    assert q.scale.shape == (2, 1)
+    np.testing.assert_allclose(np.asarray(q.scale[:, 0]),
+                               [0.5 / vmax(8), 100.0 / vmax(8)], rtol=1e-6)
+    # per_channel=True reduces all-but-last axis (per COLUMN) — different.
+    col = quantize(x, bits=8, per_channel=True)
+    assert col.scale.shape == (1, 4)
+    back = q.dequantize()
+    np.testing.assert_allclose(np.asarray(back[0]), np.asarray(x[0]),
+                               atol=0.5 / vmax(8))
+
+
+def test_per_row_equals_per_tensor_at_one_row():
+    x = _acts(1, 32)
+    pr = quantize_per_row(x, bits=8)
+    pt = quantize(x, bits=8, per_channel=False)
+    assert (np.asarray(pr.values) == np.asarray(pt.values)).all()
+    np.testing.assert_allclose(np.asarray(pr.scale).ravel(),
+                               np.asarray(pt.scale).ravel(), rtol=1e-7)
+
+
+def test_per_row_codes_are_batch_independent():
+    # The strict-gate property itself: a row's codes must not change when
+    # it is co-batched with an outlier row.
+    x = _acts(2, 16)
+    outlier = x.at[1].multiply(100.0)
+    solo = quantize_per_row(x[:1], bits=8)
+    with_outlier = quantize_per_row(outlier, bits=8)
+    assert (np.asarray(solo.values[0])
+            == np.asarray(with_outlier.values[0])).all()
+    # Per-tensor coupling really does move row 0's codes (the outlier
+    # coarsens the shared grid) — without it the gate has nothing to fix.
+    pt_solo = quantize(x[:1], bits=8, per_channel=False)
+    pt_out = quantize(outlier, bits=8, per_channel=False)
+    assert (np.asarray(pt_solo.values[0])
+            != np.asarray(pt_out.values[0])).any()
+
+
+def test_activation_scaling_scope():
+    assert common.activation_scale_mode() == "per-tensor"
+    with common.activation_scaling("per-row"):
+        assert common.activation_scale_mode() == "per-row"
+        with common.activation_scaling("per-tensor"):
+            assert common.activation_scale_mode() == "per-tensor"
+        assert common.activation_scale_mode() == "per-row"
+    assert common.activation_scale_mode() == "per-tensor"
+    with pytest.raises(ValueError):
+        with common.activation_scaling("per-batch"):
+            pass
+
+
+def test_dense_per_row_bit_exact_at_batch_one():
+    x = _acts(1, 32)[None]  # (batch=1, seq=1, k)
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(32, 8)), jnp.float32)
+    with backends.use_backend("bgemm", bits=8):
+        pt = common.dense(w, x, name="probe")
+        with common.activation_scaling("per-row"):
+            pr = common.dense(w, x, name="probe")
+    assert (np.asarray(pt) == np.asarray(pr)).all()
+
+
+def test_dense_per_row_output_independent_of_batchmates():
+    w = jnp.asarray(np.random.default_rng(1).normal(size=(16, 8)), jnp.float32)
+    x = _acts(2, 16, seed=2)
+    outlier = x.at[1].multiply(100.0)
+    with backends.use_backend("bgemm", bits=8), \
+            common.activation_scaling("per-row"):
+        solo = common.dense(w, x[:1][None], name="probe")
+        batched = common.dense(w, outlier[None], name="probe")
+    assert (np.asarray(solo[0, 0]) == np.asarray(batched[0, 0])).all()
