@@ -25,7 +25,14 @@ anything:
   analytic expected-error bound
   (:func:`repro.analysis.ranges.stochastic_error_bound`) squared must stay
   within the plan's recorded ``max_rel_mse`` accuracy guard — the same
-  pre-filter the planner applies, re-derived statically from the document.
+  pre-filter the planner applies, re-derived statically from the document;
+* ``packed-width-mismatch`` — when the caller supplies the widths of a
+  bit-packed weight store (``packed_bits``, site name -> stored bits, e.g.
+  from :func:`repro.core.packing.packed_widths`), every packed site must
+  resolve to an entry assigning exactly that width: executing a 4-bit plan
+  against an 8-bit store either re-rounds frozen codes or raises at trace
+  time (``models/common``'s runtime guard) — the plan and the store were
+  built from different planning runs.
 
 Site inventories come from the plan's own evidence by default (entries
 record ``k``/``n_out``), or from a model trace when the caller has one.
@@ -35,7 +42,7 @@ from __future__ import annotations
 
 import fnmatch
 import pathlib
-from typing import Sequence
+from typing import Mapping, Sequence
 
 from repro.analysis import ranges
 from repro.analysis.findings import ERROR, WARNING, Finding
@@ -190,10 +197,34 @@ def _pattern_findings(plan: BackendPlan, *,
     return out
 
 
+def _packed_findings(plan: BackendPlan, *,
+                     packed_bits: Mapping[str, int] | None,
+                     where_prefix: str) -> list[Finding]:
+    """``packed-width-mismatch``: the store's frozen widths vs the plan's."""
+    out: list[Finding] = []
+    if not packed_bits:
+        return out
+    for name in sorted(packed_bits):
+        entry = plan.assignment_for(name)
+        if entry is None:
+            continue  # unmatched sites run float (dequantized) — no conflict
+        if int(entry.bits) != int(packed_bits[name]):
+            out.append(Finding(
+                pass_name="plan-lint", rule="packed-width-mismatch",
+                severity=ERROR, where=f"{where_prefix}{name}",
+                message=f"plan assigns {entry.design}@{entry.bits}b but the "
+                        f"packed store holds {int(packed_bits[name])}-bit "
+                        f"codes — repack from the float parameters with "
+                        f"backends.pack_weights(cfg, params, plan)"))
+    return out
+
+
 def lint_backend_plan(plan: BackendPlan, *,
                       site_names: Sequence[str] | None = None,
                       where_prefix: str = "",
-                      k_override: int | None = None) -> list[Finding]:
+                      k_override: int | None = None,
+                      packed_bits: Mapping[str, int] | None = None
+                      ) -> list[Finding]:
     """All findings for one flat :class:`BackendPlan`."""
     out: list[Finding] = []
     max_rel_mse = plan.metadata().get("max_rel_mse")
@@ -205,11 +236,15 @@ def lint_backend_plan(plan: BackendPlan, *,
                                    max_rel_mse=max_rel_mse))
     out.extend(_pattern_findings(plan, site_names=site_names,
                                  where_prefix=where_prefix))
+    out.extend(_packed_findings(plan, packed_bits=packed_bits,
+                                where_prefix=where_prefix))
     return out
 
 
 def lint_grid_plan(plan: GridPlan, *,
-                   site_names: Sequence[str] | None = None) -> list[Finding]:
+                   site_names: Sequence[str] | None = None,
+                   packed_bits: Mapping[str, int] | None = None
+                   ) -> list[Finding]:
     """Findings for a :class:`GridPlan`: per-shard plans check shard-local
     contraction lengths (their entries record the slice dims); the
     aggregate plan is checked at the geometry's padded K split, which is
@@ -229,16 +264,20 @@ def lint_grid_plan(plan: GridPlan, *,
                                    max_rel_mse=max_rel_mse))
     out.extend(_pattern_findings(agg, site_names=site_names,
                                  where_prefix="aggregate "))
+    out.extend(_packed_findings(agg, packed_bits=packed_bits,
+                                where_prefix="aggregate "))
     return out
 
 
-def lint_plan(plan, *, site_names: Sequence[str] | None = None
-              ) -> list[Finding]:
+def lint_plan(plan, *, site_names: Sequence[str] | None = None,
+              packed_bits: Mapping[str, int] | None = None) -> list[Finding]:
     """Dispatch on plan flavour."""
     if isinstance(plan, GridPlan):
-        return lint_grid_plan(plan, site_names=site_names)
+        return lint_grid_plan(plan, site_names=site_names,
+                              packed_bits=packed_bits)
     if isinstance(plan, BackendPlan):
-        return lint_backend_plan(plan, site_names=site_names)
+        return lint_backend_plan(plan, site_names=site_names,
+                                 packed_bits=packed_bits)
     raise TypeError(f"expected BackendPlan or GridPlan, got {type(plan)!r}")
 
 

@@ -21,6 +21,11 @@ but Python cannot enforce:
   float32 accumulation silently re-introduces the rounding the designs'
   exactness claim excludes (uGEMM's float-count path is the documented
   exception and is not an exact design).
+* ``packed-materialize`` — ``kernels/packed_gemm.py``'s execute paths
+  exist so the dequantized weight matrix never materializes; a
+  ``dequantize(...)`` call there silently reverts the fused kernel to a
+  materialize-then-contract path, undoing the 4–16x HBM-traffic cut the
+  packed store is for.
 
 Suppression: a ``# analysis: allow-<rule>`` comment on the flagged line or
 on the enclosing ``def`` line disables that rule there (used where a rule's
@@ -38,7 +43,7 @@ from typing import Iterable
 from repro.analysis.findings import ERROR, Finding
 
 RULES = ("registry-mutation", "deprecated-shim", "unjitted-rng",
-         "float-accumulation")
+         "float-accumulation", "packed-materialize")
 
 _PRAGMA_RE = re.compile(r"#\s*analysis:\s*allow-([a-z0-9-]+)")
 
@@ -52,6 +57,7 @@ _REGISTRY_MUTATORS = {"register_design", "registry_restore"}
 _SCOPE_MANAGERS = {"scoped_registry", "kernel_backends"}
 
 _EXECUTE_PATH_PARTS = ("repro/backends/", "repro/kernels/", "repro/serving/")
+_PACKED_KERNEL_PARTS = ("kernels/packed_gemm",)
 _EXACT_KERNEL_PREFIXES = ("bgemm", "tugemm", "tubgemm", "tu_gemm",
                           "tub_gemm", "quant_gemm")
 _CONTRACTION_FUNCS = {"einsum", "matmul", "dot", "dot_general", "tensordot"}
@@ -203,6 +209,7 @@ class _FileLint(ast.NodeVisitor):
                     f"{full} on the execute path outside a jitted "
                     f"function — host-synchronizing RNG per call")
         self._check_accumulation(node)
+        self._check_packed_materialize(node)
         self.generic_visit(node)
 
     def _exempt(self, rule: str) -> bool:
@@ -238,6 +245,19 @@ class _FileLint(ast.NodeVisitor):
             f"contraction in exact-design kernel {kernel!r} without an "
             f"integer preferred_element_type — partial sums would "
             f"accumulate in float, voiding the bit-exactness claim")
+
+    def _check_packed_materialize(self, node: ast.Call) -> None:
+        if not any(p in self.rel for p in _PACKED_KERNEL_PARTS):
+            return
+        chain = _dotted(node.func) or ""
+        if chain.rpartition(".")[2] != "dequantize":
+            return
+        self._flag(
+            "packed-materialize", node,
+            "dequantize(...) inside the packed-GEMM kernel module — the "
+            "fused execute path must contract int32-word tiles directly; "
+            "materializing the dequantized matrix reverts the packed "
+            "store's HBM-traffic saving")
 
     def _registry_store(self, node: ast.AST) -> None:
         chain = _dotted(node) or (node.id if isinstance(node, ast.Name)

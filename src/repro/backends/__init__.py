@@ -31,8 +31,8 @@ from repro.backends.runtime import (BackendExecution, ExecutedGemm,
                                     PlanExecution, SiteRecorder,
                                     active_backend, active_execution,
                                     current_site, measure_matrix_cycles,
-                                    record_sites, site_scope, use_backend,
-                                    use_plan)
+                                    pack_weights, record_sites, site_scope,
+                                    use_backend, use_plan)
 
 __all__ = [
     "GemmBackend",
@@ -59,6 +59,7 @@ __all__ = [
     "active_execution",
     "current_site",
     "measure_matrix_cycles",
+    "pack_weights",
     "record_sites",
     "site_scope",
     "use_backend",

@@ -52,9 +52,9 @@ from repro.backends.base import GemmBackend
 # is lazy about devices: scoping must stay importable everywhere.
 
 __all__ = ["ExecutedGemm", "BackendExecution", "PlanExecution",
-           "SiteRecorder", "use_backend", "use_plan", "record_sites",
-           "active_backend", "active_execution", "site_scope", "current_site",
-           "measure_matrix_cycles"]
+           "SiteRecorder", "use_backend", "use_plan", "pack_weights",
+           "record_sites", "active_backend", "active_execution", "site_scope",
+           "current_site", "measure_matrix_cycles"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -334,6 +334,96 @@ def use_plan(plan, *, grid=None):
         yield execution
 
 
+def pack_weights(cfg, params, plan=None, *, bits: int | None = None,
+                 grid=None):
+    """Freeze each planned site's weight bit-packed at its assigned width.
+
+    Returns a new parameter tree in which every dense GEMM site that
+    ``plan`` assigns a backend is replaced by a
+    :class:`repro.core.packing.PackedQuantized` store holding the *exact*
+    codes and scales ``models/common.dense`` would compute on that site
+    under the plan — so executing the packed tree inside :func:`use_plan`
+    is bit-identical to executing the float tree, while the weight bytes
+    shrink 4–16x (``core.accounting.packed_store_report``).
+
+    ``plan`` — a :class:`~repro.backends.plan.BackendPlan` /
+    :class:`~repro.backends.grid.GridPlan` or a path (schema-sniffed via
+    ``load_plan``).  Alternatively pass ``bits`` to freeze every
+    discovered site at one uniform width (the ``use_backend`` analogue).
+    Sites the plan leaves unmatched keep their float leaves — they run
+    the float path under ``use_plan``, exactly as before.
+
+    ``grid`` — (units_x, units_y) / ``"X,Y"``: pack per shard along the
+    same ceil K-split :meth:`~repro.backends.grid.GridBackend.execute`
+    applies, so no int32 word straddles a shard boundary.  A
+    :class:`GridPlan` brings its own grid.
+
+    Already-packed leaves pass through when their width matches the
+    assignment and raise otherwise (the stale-width hazard plan-lint's
+    ``packed-width-mismatch`` rule catches statically).
+    """
+    import jax
+
+    from repro.core import packing
+
+    if (plan is None) == (bits is None):
+        raise ValueError("pack_weights wants exactly one of plan= or bits=")
+    entry_plan = None
+    if plan is not None:
+        from repro.backends.grid import GridPlan, load_plan
+        from repro.backends.plan import BackendPlan
+        if not isinstance(plan, (BackendPlan, GridPlan)):
+            plan = load_plan(plan)
+        entry_plan = plan.aggregate if isinstance(plan, GridPlan) else plan
+        if isinstance(plan, GridPlan):
+            if grid is not None:
+                from repro.backends.grid import parse_grid
+                if parse_grid(grid) != plan.grid:
+                    raise ValueError(
+                        f"pack_weights(grid={grid}) conflicts with the "
+                        f"GridPlan's own grid {plan.grid}")
+            grid = plan.grid
+    grid_x = 1
+    if grid is not None:
+        from repro.backends.grid import parse_grid
+        grid_x = parse_grid(grid)[0]
+
+    from repro.eval import planner as planner_lib  # lazy: imports the stack
+    assignments: dict[str, tuple[int, int, int]] = {}
+    for site in planner_lib.discover_sites(cfg, params):
+        if entry_plan is not None:
+            entry = entry_plan.assignment_for(site.name)
+            if entry is None:
+                continue
+            width = int(entry.bits)
+        else:
+            width = int(bits)
+        assignments[site.name] = (width, site.k, site.n_out)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=packing.is_packed)
+    leaves = []
+    for path, leaf in flat:
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        picked = assignments.get(name)
+        if picked is None:
+            leaves.append(leaf)
+            continue
+        width, k, n_out = picked
+        if packing.is_packed(leaf):
+            if int(leaf.bits) != width:
+                raise ValueError(
+                    f"site {name!r}: packed store holds {leaf.bits}-bit "
+                    f"codes but the plan assigns {width}-bit — repack from "
+                    f"the float parameters (packed-width-mismatch)")
+            leaves.append(leaf)
+            continue
+        leaves.append(packing.pack_quantized(leaf, bits=width, k=k,
+                                             n_out=n_out, grid_x=grid_x))
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
 def measure_matrix_cycles(backend: GemmBackend, weight, *, rows: int,
                           unit_n: int, num_units: int,
                           bit_blockmax: float | None = None,
@@ -368,9 +458,15 @@ def measure_matrix_cycles(backend: GemmBackend, weight, *, rows: int,
     """
     import jax.numpy as jnp
 
-    from repro.core import ppa, sparsity
+    from repro.core import packing, ppa, sparsity
     from repro.core.quantization import quantize
 
+    if packing.is_packed(weight):
+        raise TypeError(
+            "measure_matrix_cycles wants the float weight — measuring a "
+            "PackedQuantized store would re-quantize its dequantized codes "
+            "at a second scale; keep the float parameters for measurement "
+            "(serve's plan replay does)")
     w = jnp.asarray(weight)
     k, n_out = int(w.shape[0]), int(w.shape[1])
     if bit_blockmax is None or bit_elem is None:

@@ -20,7 +20,7 @@ from repro.core import ppa
 from repro.core.sparsity import SparsityStats
 
 __all__ = ["GemmCall", "GemmWorkloadRecorder", "ModelCost", "GridCost",
-           "price_workload"]
+           "PackedStoreReport", "packed_store_report", "price_workload"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -173,6 +173,73 @@ def price_workload(calls: list[GemmCall], design="tubgemm",
         wc_energy_uj=wc_nj * 1e-3, dyn_energy_uj=dyn_nj * 1e-3,
         per_layer=per_layer,
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class PackedStoreReport:
+    """Weight-HBM footprint of a (possibly partially) bit-packed tree.
+
+    The "bits as bytes" companion to the Eq.-1 energy tables: packing the
+    planned sites at their assigned widths cuts the weight bytes a decode
+    step streams from HBM by 4–16x (int32 words, 32/bits codes per word)
+    while the integer arithmetic — and hence the energy/latency evidence —
+    is bit-identical.  ``float32_bytes`` counts every weight leaf at fp32;
+    ``stored_bytes`` counts packed leaves at their word+scale footprint and
+    unpacked leaves at fp32, so ``reduction`` is the end-to-end factor on
+    the whole store and ``packed_reduction`` the factor on just the packed
+    sites.
+    """
+
+    float32_bytes: int
+    stored_bytes: int
+    packed_sites: int
+    total_sites: int
+    packed_float32_bytes: int
+    packed_stored_bytes: int
+
+    @property
+    def reduction(self) -> float:
+        return self.float32_bytes / max(self.stored_bytes, 1)
+
+    @property
+    def packed_reduction(self) -> float:
+        return self.packed_float32_bytes / max(self.packed_stored_bytes, 1)
+
+
+def packed_store_report(params) -> PackedStoreReport:
+    """Walk ``params`` and total the weight-store bytes (packed vs fp32).
+
+    Counts every array leaf with ``ndim >= 1``; ``total_sites`` is the
+    number of ``ndim >= 2`` leaves (the GEMM-shaped ones a plan can pack).
+    """
+    import jax
+
+    from repro.core import packing
+
+    f32 = stored = 0
+    packed_sites = total_sites = 0
+    packed_f32 = packed_stored = 0
+    leaves = jax.tree_util.tree_leaves(params, is_leaf=packing.is_packed)
+    for leaf in leaves:
+        if packing.is_packed(leaf):
+            f32 += leaf.float32_bytes
+            stored += leaf.stored_bytes
+            packed_f32 += leaf.float32_bytes
+            packed_stored += leaf.stored_bytes
+            packed_sites += 1
+            total_sites += 1
+            continue
+        if not hasattr(leaf, "ndim"):
+            continue
+        nbytes = int(leaf.size) * 4
+        f32 += nbytes
+        stored += nbytes
+        if leaf.ndim >= 2:
+            total_sites += 1
+    return PackedStoreReport(
+        float32_bytes=f32, stored_bytes=stored,
+        packed_sites=packed_sites, total_sites=total_sites,
+        packed_float32_bytes=packed_f32, packed_stored_bytes=packed_stored)
 
 
 def _price_grid(calls: list[GemmCall], design: str, bits: int, unit_n: int,

@@ -1,0 +1,359 @@
+"""Bit-packed weight stores: int2/int4/int8 codes in int32 words.
+
+Plans assign 2/4/8 bits per GEMM site, but a float parameter leaf is
+re-quantized on every call and occupies 4 bytes per element regardless of
+the assigned width — the plan's bit-width never becomes a memory-traffic
+saving.  This module freezes a site's weight at its planned width as a
+:class:`PackedQuantized` store: the *exact* int8 codes the quantizer
+produces, packed ``32 // bits`` to an int32 word, with the per-channel
+scales carried alongside.
+
+**Word layout.**  Along the packed axis (the contraction/K axis, ``-2`` of
+the ``(k, n)`` weight view), each group of ``cpw = 32 // bits`` consecutive
+codes forms one int32 word; code ``j`` of the group occupies bit lanes
+``[j*bits, (j+1)*bits)`` — lowest lanes first, matching the byte-level
+crumb/nibble order of ``repro.kernels.ops.pack_values`` and the in-kernel
+unpack of ``repro.kernels.quant_gemm``.  Unpacking sign-extends with
+arithmetic shifts, so the round trip is exact for every signed ``bits``-wide
+code — in particular the symmetric quantizer's ``[-vmax, vmax]`` range.
+Lengths that do not divide ``cpw`` are zero-padded into the last word and
+truncated back on unpack.
+
+**Scale placement.**  ``scale`` is stored verbatim from the quantizer —
+per-output-channel ``(…, 1, n)`` for weights (the ``models/common.dense``
+convention) or per-row ``(…, k, 1)``; it broadcasts against the unpacked
+codes exactly as ``Quantized.scale`` does, so
+``PackedQuantized.dequantize()`` is bit-identical to
+``Quantized.dequantize()`` on the same codes.
+
+**Grid shard packing** (``grid_x > 1``).  ``GridBackend.execute`` splits
+the contraction dim into ``units_x`` ceil-sized row bands.  A grid store
+packs each band's codes *separately* (``packed`` gains a leading shard
+axis), so no int32 word straddles a shard boundary and every chip can
+decode its own rows without touching a neighbour's words.  The
+reassembled codes equal the full-weight quantization codes — the same
+quantize-then-slice contract ``GridBackend.execute`` applies — so grid
+execution from the packed store stays bit-identical.
+
+**Pytree semantics.**  ``PackedQuantized`` registers as a pytree whose
+static aux is invariant under leading-axis slicing: a stacked-layers store
+``(L, words, n)`` scanned by ``jax.lax.scan`` yields per-layer
+``(words, n)`` stores with the same ``bits`` / ``k`` / ``tail``.  The
+logical ``shape`` / ``size`` / ``ndim`` accessors report the *unpacked*
+weight geometry, so shape-driven code (``dense``'s observe path, site
+discovery) keeps working; anything that would silently treat the store as
+a float array (``np.asarray``) fails loudly instead — see
+``repro.eval.planner.GemmSite.weight_matrix`` for the guarded hazard.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import Quantized, quantize
+
+__all__ = [
+    "PACK_BITS",
+    "PackedQuantized",
+    "codes_per_word",
+    "is_packed",
+    "pack_codes",
+    "unpack_codes",
+    "from_quantized",
+    "pack_quantized",
+    "packed_widths",
+]
+
+#: operand widths with a whole number of codes per int32 word
+PACK_BITS = (2, 4, 8)
+
+
+def codes_per_word(bits: int) -> int:
+    """How many ``bits``-wide codes one int32 word holds (16 / 8 / 4)."""
+    if bits not in PACK_BITS:
+        raise ValueError(f"packable widths are {PACK_BITS}, got bits={bits}")
+    return 32 // bits
+
+
+@partial(jax.jit, static_argnames=("bits", "axis"))
+def pack_codes(codes: jax.Array, bits: int, axis: int = -2) -> jax.Array:
+    """Pack signed ``bits``-wide codes into int32 words along ``axis``.
+
+    ``codes`` — any integer array whose values fit ``bits`` signed bits
+    (the int8 container ``quantize`` emits).  The packed axis shrinks to
+    ``ceil(len / cpw)`` words; a non-divisible length is zero-padded into
+    the last word (zero codes are exact zeros on every design).  Exact
+    inverse: :func:`unpack_codes` with the original length.
+    """
+    cpw = codes_per_word(bits)
+    codes = jnp.asarray(codes)
+    ax = axis % codes.ndim
+    x = jnp.moveaxis(codes, ax, -1).astype(jnp.int32)
+    n = x.shape[-1]
+    words = -(-n // cpw)
+    x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, words * cpw - n)])
+    x = x.reshape(*x.shape[:-1], words, cpw)
+    mask = (1 << bits) - 1
+    shifts = (jnp.arange(cpw, dtype=jnp.int32) * bits).astype(jnp.int32)
+    # Lanes are disjoint bit fields, so a wrapping int32 sum assembles the
+    # word bit pattern exactly (the top lane may set the sign bit).
+    word = jnp.sum(jnp.left_shift(jnp.bitwise_and(x, mask), shifts), axis=-1)
+    return jnp.moveaxis(word.astype(jnp.int32), -1, ax)
+
+
+@partial(jax.jit, static_argnames=("bits", "length", "axis"))
+def unpack_codes(packed: jax.Array, bits: int, length: int,
+                 axis: int = -2) -> jax.Array:
+    """Exact inverse of :func:`pack_codes`: int8 codes of ``length`` along
+    ``axis``, sign-extended with arithmetic shifts."""
+    cpw = codes_per_word(bits)
+    packed = jnp.asarray(packed)
+    ax = axis % packed.ndim
+    x = jnp.moveaxis(packed, ax, -1)
+    # lane j: left-align its field, then arithmetic-shift down to sign-extend
+    up_shift = (32 - bits * (jnp.arange(cpw, dtype=jnp.int32) + 1)).astype(
+        jnp.int32)
+    lanes = jnp.right_shift(jnp.left_shift(x[..., None], up_shift), 32 - bits)
+    flat = lanes.reshape(*x.shape[:-1], x.shape[-1] * cpw)
+    return jnp.moveaxis(flat[..., :length].astype(jnp.int8), -1, ax)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedQuantized:
+    """A weight frozen at its planned width: packed int32 codes + scales.
+
+    ``packed`` — int32 words, ``(*lead, words, n)`` (flat) or
+    ``(*lead, grid_x, shard_words, n)`` (grid store); ``scale`` — the
+    quantizer's float32 scales, broadcastable against the unpacked
+    ``(*lead, k, n)`` codes; ``bits`` / ``k`` / ``tail`` / ``grid_x`` are
+    static: operand width, logical length of the packed axis, and the
+    logical trailing dims (``prod(tail) == n``) the 2-D code view folds.
+
+    The aux data deliberately excludes leading (stack) dims so that
+    ``lax.scan`` slicing a stacked store yields consistent per-layer
+    stores.
+    """
+
+    packed: jax.Array
+    scale: jax.Array
+    bits: int
+    k: int
+    tail: tuple[int, ...]
+    grid_x: int = 1
+    #: logical dims folding to ``k`` (e.g. ``(heads, head_dim)`` for the
+    #: attention out-projection); ``()`` means the single axis ``(k,)``.
+    k_shape: tuple[int, ...] = ()
+
+    def tree_flatten(self):
+        return ((self.packed, self.scale),
+                (self.bits, self.k, self.tail, self.grid_x, self.k_shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        packed, scale = children
+        return cls(packed=packed, scale=scale, bits=aux[0], k=aux[1],
+                   tail=aux[2], grid_x=aux[3], k_shape=aux[4])
+
+    # -- logical geometry (the *unpacked* weight's) -------------------------
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        lead = (self.packed.shape[:-3] if self.grid_x > 1
+                else self.packed.shape[:-2])
+        return (*lead, *(self.k_shape or (self.k,)), *self.tail)
+
+    def reshape(self, *shape) -> "PackedQuantized":
+        """Metadata-only regroup of the logical dims (no data movement).
+
+        Supports the caller-side flattening ``models/attention._out_proj``
+        performs (``wo.reshape(h * hd, d)``): the target must regroup the
+        same elements into ``(*k_dims, *tail_dims)`` with the tail folding
+        to ``n_out`` and the rest to ``k`` — the packed words and scales
+        are untouched.  Only unstacked stores reshape (a stacked store is
+        sliced by the scan before any per-layer reshape).
+        """
+        if len(shape) == 1 and isinstance(shape[0], (tuple, list)):
+            shape = tuple(shape[0])
+        shape = tuple(int(s) for s in shape)
+        lead_ndim = (self.packed.ndim - 3 if self.grid_x > 1
+                     else self.packed.ndim - 2)
+        if lead_ndim:
+            raise ValueError(
+                f"cannot reshape a stacked packed store (lead dims "
+                f"{self.packed.shape[:lead_ndim]}); slice it first")
+        tail_len, prod = 0, 1
+        while prod < self.n_out and tail_len < len(shape):
+            tail_len += 1
+            prod *= shape[len(shape) - tail_len]
+        k_dims = shape[:len(shape) - tail_len]
+        if prod != self.n_out or math.prod(k_dims) != self.k:
+            raise ValueError(
+                f"cannot reshape packed store of logical shape {self.shape} "
+                f"(k={self.k}, n_out={self.n_out}) to {shape}: the target "
+                f"must regroup into (k dims, tail dims) without mixing the "
+                f"contraction and output axes")
+        return dataclasses.replace(
+            self, tail=shape[len(shape) - tail_len:],
+            k_shape=() if k_dims == (self.k,) else k_dims)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    @property
+    def n_out(self) -> int:
+        return math.prod(self.tail)
+
+    # -- bytes accounting ---------------------------------------------------
+
+    @property
+    def stored_bytes(self) -> int:
+        """Bytes the packed store actually occupies (words + scales)."""
+        return int(self.packed.size) * 4 + int(
+            self.scale.size) * self.scale.dtype.itemsize
+
+    @property
+    def float32_bytes(self) -> int:
+        """Bytes the float32 leaf it replaced occupied."""
+        return self.size * 4
+
+    # -- decode -------------------------------------------------------------
+
+    def codes(self) -> jax.Array:
+        """The exact int8 quantizer codes, ``(*lead, k, n)``."""
+        if self.grid_x > 1:
+            ks = -(-self.k // self.grid_x)
+            sub = unpack_codes(self.packed, self.bits, ks, axis=-2)
+            full = sub.reshape(*sub.shape[:-3], self.grid_x * ks,
+                               sub.shape[-1])
+            return full[..., :self.k, :]
+        return unpack_codes(self.packed, self.bits, self.k, axis=-2)
+
+    def quantized(self) -> Quantized:
+        """The equivalent :class:`~repro.core.quantization.Quantized` —
+        what ``quantize(w, bits)`` produced before packing."""
+        return Quantized(values=self.codes(), scale=self.scale,
+                         bits=self.bits)
+
+    def dequantize(self) -> jax.Array:
+        """Float32 weight in the logical shape (codes × scale)."""
+        dq = self.codes().astype(self.scale.dtype) * self.scale
+        return dq.reshape(self.shape)
+
+
+def is_packed(leaf) -> bool:
+    """True iff ``leaf`` is a :class:`PackedQuantized` store (the
+    ``is_leaf`` predicate every parameter-tree walk must pass so a store
+    stays one leaf instead of decomposing into its children)."""
+    return isinstance(leaf, PackedQuantized)
+
+
+def from_quantized(q: Quantized, *, tail: tuple[int, ...] | None = None,
+                   k_shape: tuple[int, ...] = (),
+                   grid_x: int = 1) -> PackedQuantized:
+    """Pack an existing :class:`Quantized` (codes ``(*lead, k, n)``).
+
+    ``tail`` defaults to ``(n,)``; ``k_shape`` names the logical dims the
+    packed axis folds (``()`` = the single axis); ``grid_x`` > 1 packs per
+    K-band as described in the module docstring.
+    """
+    values = jnp.asarray(q.values)
+    if values.ndim < 2:
+        raise ValueError(f"packing wants (…, k, n) codes, got {values.shape}")
+    k, n = int(values.shape[-2]), int(values.shape[-1])
+    tail = (n,) if tail is None else tuple(int(t) for t in tail)
+    if math.prod(tail) != n:
+        raise ValueError(f"tail {tail} does not fold the {n} output columns")
+    k_shape = tuple(int(s) for s in k_shape)
+    if k_shape and math.prod(k_shape) != k:
+        raise ValueError(f"k_shape {k_shape} does not fold the packed "
+                         f"length {k}")
+    if grid_x > 1:
+        ks = -(-k // grid_x)
+        pad = [(0, 0)] * (values.ndim - 2) + [(0, grid_x * ks - k), (0, 0)]
+        banded = jnp.pad(values, pad).reshape(
+            *values.shape[:-2], grid_x, ks, n)
+        packed = pack_codes(banded, q.bits, axis=-2)
+    else:
+        packed = pack_codes(values, q.bits, axis=-2)
+    return PackedQuantized(packed=packed, scale=jnp.asarray(q.scale),
+                           bits=int(q.bits), k=k, tail=tail,
+                           grid_x=int(grid_x), k_shape=k_shape)
+
+
+def pack_quantized(w, *, bits: int, k: int | None = None,
+                   n_out: int | None = None,
+                   grid_x: int = 1) -> PackedQuantized:
+    """Quantize a float leaf exactly as ``models/common.dense`` would and
+    freeze the codes packed.
+
+    ``w`` — a ``(…, k, *tail)`` float leaf (a dense weight, possibly
+    stacked along leading scan axes).  ``k`` / ``n_out`` name the per-call
+    contraction geometry (from the site record); they default to
+    ``w.shape[0]`` / ``w.size // k`` — the unstacked case.  Each
+    ``(k, n_out)`` slice is quantized per output channel with its *own*
+    scales (what ``_backend_matmul`` computes per invocation), so packed
+    execution is bit-identical to quantize-on-the-fly execution.
+    """
+    if is_packed(w):
+        raise ValueError(
+            f"leaf is already a PackedQuantized store at {w.bits}-bit — "
+            "packing packed codes at a second width compounds quantization "
+            "error; pack from the float parameters")
+    w = jnp.asarray(w)
+    if w.ndim < 2:
+        raise ValueError(f"packing wants a >=2-D weight, got shape {w.shape}")
+    k = int(w.shape[0]) if k is None else int(k)
+    n_out = int(w.size) // k if n_out is None else int(n_out)
+    # Split shape into (*lead, *k_dims, *tail): the trailing dims fold to
+    # n_out, the middle ones to k (possibly several — e.g. the attention
+    # out-projection's (heads, head_dim)), the rest are stack dims.
+    tail_len, prod = 0, 1
+    while prod < n_out and tail_len < w.ndim:
+        tail_len += 1
+        prod *= int(w.shape[w.ndim - tail_len])
+    bad = prod != n_out
+    k_len, kprod = 0, 1
+    while not bad and kprod < k and k_len + tail_len < w.ndim:
+        k_len += 1
+        kprod *= int(w.shape[w.ndim - tail_len - k_len])
+    lead_len = w.ndim - tail_len - k_len
+    if (bad or kprod != k
+            or math.prod(w.shape[:lead_len]) * k * n_out != w.size):
+        raise ValueError(
+            f"leaf shape {tuple(w.shape)} is not a stack of "
+            f"(k={k}, n_out={n_out}) matrices")
+    k_dims = tuple(int(s) for s in w.shape[lead_len:lead_len + k_len])
+    tail = tuple(int(t) for t in w.shape[lead_len + k_len:])
+    w3 = w.astype(jnp.float32).reshape(*w.shape[:lead_len], k, n_out)
+    qfn = partial(quantize, bits=bits)
+    for _ in range(lead_len):
+        qfn = jax.vmap(qfn)
+    q = qfn(w3)
+    return from_quantized(q, tail=tail,
+                          k_shape=() if k_dims == (k,) else k_dims,
+                          grid_x=grid_x)
+
+
+def packed_widths(params) -> dict[str, int]:
+    """``{site-path: bits}`` for every packed store in ``params`` — the
+    mapping plan-lint's ``packed-width-mismatch`` check consumes (site
+    names equal parameter-tree paths per the runtime naming contract)."""
+    flat = jax.tree_util.tree_flatten_with_path(params, is_leaf=is_packed)[0]
+    out: dict[str, int] = {}
+    for path, leaf in flat:
+        if is_packed(leaf):
+            name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                            for p in path)
+            out[name] = int(leaf.bits)
+    return out

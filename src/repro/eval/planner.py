@@ -49,7 +49,7 @@ from repro.analysis import ranges as ranges_lib
 from repro.backends import grid as grid_lib
 from repro.backends import runtime as runtime_lib
 from repro.backends.plan import BackendPlan, SiteAssignment
-from repro.core import ppa, sparsity
+from repro.core import packing, ppa, sparsity
 from repro.core.quantization import quantize
 from repro.core.sparsity import SparsityStats
 
@@ -115,7 +115,21 @@ class GemmSite:
 
     def weight_matrix(self) -> np.ndarray:
         """The (count · k, n_out) float32 matrix the contraction consumes
-        (all invocations stacked along rows), materialized fresh per call."""
+        (all invocations stacked along rows), materialized fresh per call.
+
+        Refuses a bit-packed leaf: the planner's sparsity/guard statistics
+        and candidate quantization must read the *pre-quantization* float
+        weight — silently re-quantizing a :class:`PackedQuantized` store's
+        dequantized codes at a second width would compound rounding error
+        into every downstream plan decision.
+        """
+        if packing.is_packed(self.leaf):
+            raise TypeError(
+                f"site {self.name!r}: leaf is an already-packed "
+                f"{self.leaf.bits}-bit PackedQuantized store — plan from the "
+                f"float parameters (pack with backends.pack_weights only "
+                f"*after* planning); re-quantizing packed codes at a second "
+                f"width compounds quantization error")
         return np.asarray(self.leaf, np.float32).reshape(-1, self.n_out)
 
     @property
@@ -148,7 +162,8 @@ class Candidate:
 
 
 def _leaf_index(params) -> dict[str, np.ndarray]:
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=packing.is_packed)[0]
     out = {}
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

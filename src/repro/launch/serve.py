@@ -54,7 +54,7 @@ import numpy as np
 
 from repro import backends as backends_lib
 from repro import configs
-from repro.core import accounting, ppa, sparsity
+from repro.core import accounting, packing, ppa, sparsity
 from repro.core import gemm_sims as gemm_sims_lib
 from repro.core.quantization import quantize
 from repro.eval import planner as planner_lib
@@ -109,7 +109,12 @@ def validate_backend_numerics(params, design, bits: int | None = None,
     """
     backend = backends_lib.resolve(design, bits=bits)
     oracle = backends_lib.resolve(oracle, bits=backend.bits)
-    leaves = [l for l in jax.tree_util.tree_leaves(params)
+    # Packed leaves dequantize for tiling — the spot-check wants float
+    # matrices to quantize fresh at the backend's width.
+    leaves = [l.dequantize() if packing.is_packed(l) else l
+              for l in jax.tree_util.tree_leaves(
+                  params, is_leaf=packing.is_packed)]
+    leaves = [l for l in leaves
               if hasattr(l, "ndim") and l.ndim >= 2 and l.size >= 2 * tile * tile]
     if not leaves:
         return 0.0
@@ -186,8 +191,8 @@ def generate(cfg, params, mesh, prompt, max_new: int, temperature: float = 0.0):
     """Greedy/temperature decoding with the jitted prefill/decode steps."""
     b, s = prompt.shape
     max_len = s + max_new
-    prefill_step = steps_lib.make_prefill_step(cfg, mesh)
-    decode_step = steps_lib.make_decode_step(cfg, mesh)
+    prefill_step = steps_lib.make_prefill_step(cfg, mesh, params_like=params)
+    decode_step = steps_lib.make_decode_step(cfg, mesh, params_like=params)
     with mesh:
         caches = model_lib.init_caches(cfg, b, max_len, dtype=jnp.float32)
         logits, caches = prefill_step(params, {"tokens": prompt}, caches)
@@ -211,7 +216,7 @@ def prefill_logits(cfg, params, mesh, prompt):
     """Full prefill logits via a freshly traced step (so an active
     ``use_backend`` scope is honored — jitted steps bind the backend at
     trace time)."""
-    prefill_step = steps_lib.make_prefill_step(cfg, mesh)
+    prefill_step = steps_lib.make_prefill_step(cfg, mesh, params_like=params)
     with mesh:
         caches = model_lib.init_caches(cfg, prompt.shape[0],
                                        prompt.shape[1] + 1, dtype=jnp.float32)
@@ -221,7 +226,8 @@ def prefill_logits(cfg, params, mesh, prompt):
 
 def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
                           *, unit_n: int, num_units: int,
-                          ref_logits=None, stats=None) -> dict:
+                          ref_logits=None, stats=None,
+                          packed: bool = False) -> dict:
     """Execute prefill+decode on ``backend`` and collect the evidence.
 
     Returns a dict: generated ``tokens``, number of distinct GEMM ``sites``
@@ -229,15 +235,21 @@ def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
     prefill-logits ``drift`` + ``top1_agreement`` vs the float model, wall
     time, and the measured/dyn/wc ``cycles`` totals per decode token.
     ``stats`` — optional pre-profiled sparsity stats at the backend's
-    bit-width, forwarded to :func:`measure_decode_cycles`.
+    bit-width, forwarded to :func:`measure_decode_cycles`.  ``packed``
+    freezes every GEMM site's weight bit-packed at the backend's width and
+    executes from the packed store; the float ``params`` keep feeding the
+    reference/measurement paths, so the evidence is comparable — and the
+    execution is bit-identical — to the unpacked run.
     """
     backend = backends_lib.resolve(backend)
+    exec_params = (backends_lib.pack_weights(cfg, params, bits=backend.bits)
+                   if packed else params)
     if ref_logits is None:
         ref_logits = prefill_logits(cfg, params, mesh, prompt)
     t0 = time.time()
     with backends_lib.use_backend(backend) as execution:
-        tokens = generate(cfg, params, mesh, prompt, max_new)
-        exec_logits = prefill_logits(cfg, params, mesh, prompt)
+        tokens = generate(cfg, exec_params, mesh, prompt, max_new)
+        exec_logits = prefill_logits(cfg, exec_params, mesh, prompt)
     wall = time.time() - t0
     if not execution.calls:
         raise RuntimeError(
@@ -263,7 +275,7 @@ def run_backend_execution(cfg, params, mesh, prompt, backend, max_new: int,
 
 
 def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
-                       *, ref_logits=None) -> dict:
+                       *, ref_logits=None, packed: bool = False) -> dict:
     """Execute prefill+decode under ``use_plan`` and collect the evidence.
 
     Like :func:`run_backend_execution` but per-site: every dense site
@@ -282,12 +294,18 @@ def run_plan_execution(cfg, params, mesh, prompt, plan, max_new: int,
     """
     grid = plan.grid if isinstance(plan, backends_lib.GridPlan) else None
     entry_plan = plan.aggregate if grid else plan
+    # packed: planned sites execute from the bit-packed store (bit-identical
+    # codes); reference logits, numerics spot-checks, site discovery and
+    # cycle measurement all keep reading the float params, so every evidence
+    # field below matches the unpacked replay.
+    exec_params = (backends_lib.pack_weights(cfg, params, plan)
+                   if packed else params)
     if ref_logits is None:
         ref_logits = prefill_logits(cfg, params, mesh, prompt)
     t0 = time.time()
     with backends_lib.use_plan(plan) as execution:
-        tokens = generate(cfg, params, mesh, prompt, max_new)
-        exec_logits = prefill_logits(cfg, params, mesh, prompt)
+        tokens = generate(cfg, exec_params, mesh, prompt, max_new)
+        exec_logits = prefill_logits(cfg, exec_params, mesh, prompt)
     wall = time.time() - t0
     if not execution.calls:
         raise RuntimeError(
@@ -507,10 +525,18 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
         num_pages=args.num_pages, max_seq_len=args.max_seq_len,
         backend=args.execute_backend, plan=plan, bits=args.bits, grid=grid,
         unit_n=args.unit_n, num_units=args.units,
-        pricing_design=args.gemm_backend)
+        pricing_design=args.gemm_backend, packed=args.packed)
     scope = (f"plan {args.backend_plan}" if plan is not None
              else f"backend {args.execute_backend}@{args.bits}"
              if args.execute_backend else "float model")
+    if args.packed:
+        rep = accounting.packed_store_report(engine._exec_params)
+        scope += " [packed]"
+        print(f"packed weight store: {rep.packed_sites}/{rep.total_sites} "
+              f"sites bit-packed, {rep.stored_bytes / 2**20:.2f} MiB vs "
+              f"{rep.float32_bytes / 2**20:.2f} MiB fp32 "
+              f"({rep.reduction:.2f}x smaller; packed sites alone "
+              f"{rep.packed_reduction:.2f}x)")
     print(f"\n=== serving traffic on {args.arch}: {len(trace)} requests "
           f"(Poisson rate {args.arrival_rate}/step, seed {args.seed}), "
           f"{args.batch} slots, {engine.num_pages} pages x {args.page_size} "
@@ -617,6 +643,13 @@ def main() -> int:
     ap.add_argument("--max-seq-len", type=int, default=64,
                     help="[traffic] per-request position budget "
                          "(prompt + output)")
+    ap.add_argument("--packed", action="store_true",
+                    help="freeze every planned site's weight bit-packed "
+                         "(int32 words, 32/bits codes each) at its assigned "
+                         "width and execute from the packed store; "
+                         "bit-identical to quantize-then-execute, 4-16x "
+                         "fewer weight bytes; needs --execute-backend or "
+                         "--backend-plan to fix the widths")
     ap.add_argument("--grid", default=None, metavar="X,Y",
                     help="tensor-parallel PE-array grid: 'plan' derives a "
                          "per-shard heterogeneous GridPlan; execution modes "
@@ -626,6 +659,10 @@ def main() -> int:
                          "device_count=N)")
     args = ap.parse_args()
 
+    if args.packed and not (args.execute_backend or args.backend_plan):
+        print("error: --packed needs --execute-backend or --backend-plan "
+              "to fix each site's bit-width")
+        return 2
     if args.execute_backend:
         # No argparse choices= — the spec grammar ("ugemm_stochastic:64")
         # is the registry's; let resolve() validate it once, up front.
@@ -732,7 +769,8 @@ def main() -> int:
               f"({backend.bits}-bit int tiles{ltag}){gtag} ===")
         result = run_backend_execution(
             cfg, params, mesh, prompt, backend, args.tokens,
-            unit_n=args.unit_n, num_units=args.units, stats=stats)
+            unit_n=args.unit_n, num_units=args.units, stats=stats,
+            packed=args.packed)
         qt = result["tokens"]
         print(f"generated {qt.shape} tokens in {result['wall_s']:.2f}s; "
               f"{result['sites']} dense GEMM sites contracted on the backend")
@@ -771,7 +809,7 @@ def main() -> int:
               f"{gtag} ({labels}) ===")
         print(analysis_verdict(plan))
         result = run_plan_execution(cfg, params, mesh, prompt, plan,
-                                    args.tokens)
+                                    args.tokens, packed=args.packed)
         qt = result["tokens"]
         print(f"generated {qt.shape} tokens in {result['wall_s']:.2f}s; "
               f"{len(result['site_backends'])} dense GEMM sites contracted:")

@@ -54,6 +54,26 @@ def named(mesh, spec_tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
+def adapt_param_pspecs(p_specs, params):
+    """Re-rank spec leaves whose parameter is a bit-packed store.
+
+    ``model_lib.param_pspecs`` specs the *float* leaf shapes; a
+    ``PackedQuantized`` leaf flattens to (words, scales) children of
+    different ranks, so the float spec cannot broadcast onto it.  Packed
+    stores replicate (weight bytes are 4-16x smaller — replication is the
+    point); every other position keeps its spec.
+    """
+    from repro.core import packing
+
+    def one(spec, leaf):
+        if packing.is_packed(leaf):
+            return jax.tree_util.tree_map(lambda _: P(), leaf)
+        return spec
+
+    return jax.tree_util.tree_map(one, p_specs, params,
+                                  is_leaf=lambda x: isinstance(x, P))
+
+
 def train_state_pspecs(cfg: ModelConfig, mesh):
     pspec = model_lib.param_pspecs(cfg, mesh)
     return TrainState(
@@ -182,8 +202,12 @@ def make_train_step(cfg: ModelConfig, mesh, opt_cfg: AdamWConfig,
 
 
 def make_prefill_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
-                      max_len: int | None = None):
-    """(params, inputs, caches) -> (logits, caches)."""
+                      max_len: int | None = None, params_like=None):
+    """(params, inputs, caches) -> (logits, caches).
+
+    ``params_like`` — the actual parameter tree when it may hold bit-packed
+    stores (their spec leaves re-rank, see :func:`adapt_param_pspecs`).
+    """
     rules, overrides = _batch_rules(cfg, mesh, batch_size)
 
     def step_fn(params, inputs, caches):
@@ -192,6 +216,8 @@ def make_prefill_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
                                      caches=caches, embeds=inputs.get("embeds"))
 
     p_specs = model_lib.param_pspecs(cfg, mesh, phase="inference")
+    if params_like is not None:
+        p_specs = adapt_param_pspecs(p_specs, params_like)
     c_specs = model_lib.cache_pspecs(cfg, mesh, batch=batch_size or 0,
                                      max_len=max_len or 0)
     in_specs = batch_pspecs(cfg, mesh, batch_size=batch_size)
@@ -207,7 +233,7 @@ def make_prefill_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
 
 
 def make_decode_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
-                     max_len: int | None = None):
+                     max_len: int | None = None, params_like=None):
     """(params, tokens (B,1), caches, cache_pos) -> (logits, caches)."""
     rules, overrides = _batch_rules(cfg, mesh, batch_size)
 
@@ -217,6 +243,8 @@ def make_decode_step(cfg: ModelConfig, mesh, batch_size: int | None = None,
                                          cache_pos=cache_pos)
 
     p_specs = model_lib.param_pspecs(cfg, mesh, phase="inference")
+    if params_like is not None:
+        p_specs = adapt_param_pspecs(p_specs, params_like)
     c_specs = model_lib.cache_pspecs(cfg, mesh, batch=batch_size or 0,
                                      max_len=max_len or 0)
     axes = tuple(mesh.axis_names)

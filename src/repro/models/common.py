@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import packing
 from repro.core.quantization import Quantized, quantize, quantize_per_row
 from repro.models.config import ModelConfig
 
@@ -314,6 +315,12 @@ def dense(w: jax.Array, x: jax.Array, cfg: ModelConfig | None = None,
         # plan's drift/bit-exactness evidence.
         return _plain_matmul(x, w)
     if cfg is not None and cfg.quant_bits is not None and cfg.quant_kernel:
+        if packing.is_packed(w):
+            raise TypeError(
+                "cfg.quant_kernel re-quantizes at cfg.quant_bits, which "
+                "would round already-packed codes a second time — execute "
+                "packed stores under use_backend/use_plan at the store's "
+                "width, or keep float parameters for the quant-kernel path")
         from repro.kernels import ops as kops
         w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
         wq = quantize(w2.astype(jnp.float32), bits=cfg.quant_bits)
@@ -342,23 +349,52 @@ def _backend_matmul(execution, backend, site: str, w: jax.Array,
     activation streams as the temporal operand (orientation does not change
     the integer result; cycle accounting prices the weight-streamed
     schedule, see ``launch/serve.py``).
+
+    A :class:`repro.core.packing.PackedQuantized` weight skips the weight
+    quantize: its store holds exactly the codes and scales ``quantize``
+    would produce at pack time, so the execute + rescale recipe below is
+    bit-identical to the float-leaf path — *iff* the store's width matches
+    the backend's.  A mismatch is the stale-weight hazard (the codes were
+    rounded for a different grid) and raises rather than re-quantizing.
     """
-    w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
     x2 = x.reshape(-1, x.shape[-1])
-    wq = quantize(w2.astype(jnp.float32), bits=backend.bits)
+    if packing.is_packed(w):
+        if int(w.bits) != int(backend.bits):
+            raise ValueError(
+                f"site {site!r}: packed store holds {w.bits}-bit codes but "
+                f"the backend executes at {backend.bits}-bit — re-quantizing "
+                f"packed codes at a second width compounds quantization "
+                f"error; repack from the float parameters with "
+                f"backends.pack_weights (packed-width-mismatch)")
+        wq = w.quantized()  # exact pack-time codes (k, n) + per-channel scale
+        k, n_out = w.k, w.n_out
+    else:
+        w2 = w.reshape(w.shape[0], -1) if w.ndim > 2 else w
+        wq = quantize(w2.astype(jnp.float32), bits=backend.bits)
+        k, n_out = w2.shape[0], w2.shape[1]
     if activation_scale_mode() == "per-row":
         xq = quantize_per_row(x2.astype(jnp.float32), bits=backend.bits)
     else:
         xq = quantize(x2.astype(jnp.float32), bits=backend.bits,
                       per_channel=False)
     out = backend.execute(xq.values, wq.values)
-    out = out.astype(jnp.float32) * (xq.scale * wq.scale.reshape(1, -1))
-    execution.record(site, m=x2.shape[0], k=w2.shape[0], n_out=w2.shape[1],
-                     backend=backend)
+    # Apply the two dequant scales sequentially (one multiply per port)
+    # rather than pre-multiplying them: the pre-product `xq.scale * wq.scale`
+    # is not bit-stable under XLA when one operand chain is a baked constant
+    # (a packed store's scales) and the other is computed in-graph, which
+    # would break packed-vs-float bit-identity by 1-2 ulp inside scanned
+    # layers.  Sequential application compiles identically for both.
+    out = out.astype(jnp.float32) * xq.scale * wq.scale.reshape(1, -1)
+    execution.record(site, m=x2.shape[0], k=k, n_out=n_out, backend=backend)
     return out.astype(x.dtype).reshape(*x.shape[:-1], *w.shape[1:])
 
 
 def _plain_matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    if packing.is_packed(w):
+        # Float path over a packed leaf (e.g. a plan leaving this site
+        # unmatched): dequantize the stored codes — the only float matrix
+        # the codes can honestly reconstruct.
+        w = w.dequantize()
     wshape = w.shape
     w2 = w.reshape(wshape[0], -1)
     y = jnp.matmul(x, w2.astype(x.dtype))

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import backends as backends_lib
-from repro.core import accounting, sparsity
+from repro.core import accounting, packing, sparsity
 
 __all__ = ["iter_weight_matrices", "EnergyModel"]
 
@@ -36,9 +36,18 @@ def iter_weight_matrices(cfg, params):
     ``name`` is the "/"-joined parameter-tree path (the plan site-naming
     contract).  The tied-embedding table is skipped when an ``lm_head``
     leaf exists, mirroring which matmuls the backend scope contracts.
+
+    Packed leaves (:class:`repro.core.packing.PackedQuantized`) yield their
+    dequantized matrix — the only float weight the stored codes can honestly
+    reconstruct.  Energy pricing should normally run on the pre-pack float
+    tree (the engine keeps it for exactly this), but the walk stays total so
+    report paths handed a packed tree don't crash.
     """
-    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    flat = jax.tree_util.tree_flatten_with_path(
+        params, is_leaf=packing.is_packed)[0]
     for path, leaf in flat:
+        if packing.is_packed(leaf):
+            leaf = leaf.dequantize()
         if not hasattr(leaf, "ndim") or leaf.ndim < 2:
             continue
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))

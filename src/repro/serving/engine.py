@@ -129,8 +129,10 @@ def paged_vs_contiguous_probe(cfg: ModelConfig, params, *, batch: int = 2,
     btables = np.zeros((batch, cache.max_blocks), np.int32)
     worst = 0.0
     with engine._mesh as mesh:
-        prefill_step = steps_lib.make_prefill_step(cfg, mesh)
-        decode_step = steps_lib.make_decode_step(cfg, mesh)
+        prefill_step = steps_lib.make_prefill_step(cfg, mesh,
+                                                   params_like=params)
+        decode_step = steps_lib.make_decode_step(cfg, mesh,
+                                                 params_like=params)
         caches = model_lib.init_caches(cfg, batch, total, dtype=jnp.float32)
         logits, caches = prefill_step(params, {"tokens": jnp.asarray(prompts)},
                                       caches)
@@ -166,7 +168,8 @@ class ServingEngine:
                  max_seq_len: int = 64, backend: str | None = None,
                  plan=None, bits: int = 4, grid: tuple[int, int] | None = None,
                  unit_n: int = 64, num_units: int = 64,
-                 pricing_design: str | None = None, prompt_seed: int = 0):
+                 pricing_design: str | None = None, prompt_seed: int = 0,
+                 packed: bool = False):
         if cfg.attention != "gqa" or cfg.ssm is not None or cfg.rwkv is not None \
                 or cfg.family not in ("dense", "audio", "vlm") or cfg.is_moe:
             raise ValueError(
@@ -189,8 +192,24 @@ class ServingEngine:
         self.num_pages = (1 + max_batch * blocks_per_req
                           if num_pages is None else num_pages)
         design = pricing_design or backend or "tubgemm"
+        # EnergyModel (and any measurement) always reads the FLOAT leaves —
+        # Eq.-1 pricing and cycle evidence must not depend on the storage
+        # format.  Only *execution* switches to the bit-packed store.
         self.energy = EnergyModel(cfg, params, design=design, bits=bits,
                                   unit_n=unit_n, num_units=num_units, grid=grid)
+        self.packed = packed
+        if packed:
+            if backend is None and plan is None:
+                raise ValueError("packed=True needs a backend= or plan= "
+                                 "scope to fix each site's bit-width")
+            if plan is not None:
+                self._exec_params = backends_lib.pack_weights(
+                    cfg, params, plan, grid=grid)
+            else:
+                self._exec_params = backends_lib.pack_weights(
+                    cfg, params, bits=bits, grid=grid)
+        else:
+            self._exec_params = params
         self._mesh = make_grid_mesh(*grid) if grid else single_device_mesh()
         self._decode = jax.jit(self._decode_fn)
         self._prefill_fns: dict[int, object] = {}
@@ -258,7 +277,7 @@ class ServingEngine:
                 return logits, new["attn"]["k"], new["attn"]["v"]
 
             fn = self._prefill_fns[s] = jax.jit(prefill_fn)
-        return fn(self.params, tokens)
+        return fn(self._exec_params, tokens)
 
     # -- host-side serving loop -----------------------------------------------
 
@@ -377,7 +396,8 @@ class ServingEngine:
                 n_active = int(active.sum())
                 if n_active:
                     logits, k_pool, v_pool = self._decode(
-                        self.params, jnp.asarray(tokens[:, None], jnp.int32),
+                        self._exec_params,
+                        jnp.asarray(tokens[:, None], jnp.int32),
                         cache.k_pool, cache.v_pool, jnp.asarray(btables),
                         jnp.asarray(lengths, jnp.int32), jnp.asarray(active))
                     cache.sync_pools(k_pool, v_pool)
