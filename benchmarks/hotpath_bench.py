@@ -1,0 +1,222 @@
+"""Decode hot-path microbenchmark: fused page-walk vs gather attention.
+
+Times ONE jitted decode-attention call — the serving engine's per-layer
+inner loop — across a (batch, context, page_size) grid on synthetic GQA
+shapes, for both paths:
+
+* ``fused``  — :func:`repro.kernels.paged_attention_fused
+  .fused_paged_decode_attention` (the XLA page-walk lowering, the CPU
+  serving default);
+* ``gather`` — :func:`repro.kernels.paged_attention
+  .paged_decode_attention` (materialize + ``_repeat_kv`` + naive, the
+  differential oracle).
+
+Every grid point's KV pool is sized for the WORST-CASE context
+(``max_seq`` slots per request) while requests only hold ``context``
+tokens of live history — exactly the regime the fused kernel targets: the
+gather path pays O(max_blocks · page_size · H) per step regardless of
+``context``, the page walk pays O(context · KVH).  Alongside wall time
+the bench reports steps/s, tokens/s and the *modeled* KV bytes per step
+from the kernel module's traffic model (what a TPU-grade memory system
+would move; the md/json feed ``benchmarks.roofline``).
+
+Derived error (the ``benchmarks.run`` quality column) is 0.0 when the run
+holds the acceptance properties, +1.0 per violation:
+
+* fused beats gather on decode steps/s at the acceptance point
+  (B=8, context>=512, page_size=4; the largest grid point under
+  ``--smoke``);
+* modeled bytes-moved reduced >= 4x at that same point;
+* fused output stays within ``FUSED_LOGIT_TOL`` of the oracle at every
+  grid point (the bench must not go fast by going wrong).
+
+Writes ``reports/hotpath.json`` (BENCH-compatible schema, committed so CI
+has a baseline) and ``reports/hotpath.md``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+# synthetic GQA decode shapes: 4x grouping, the paper's smoke-model scale
+NUM_KV_HEADS = 2
+NUM_HEADS = 8
+HEAD_DIM = 64
+ACCEPT_BATCH = 8
+ACCEPT_CONTEXT = 512
+ACCEPT_PAGE = 4
+BYTES_RATIO_FLOOR = 4.0
+
+
+def _grid(smoke: bool):
+    """(batch, context, page_size, max_seq) points; last one is the gate."""
+    if smoke:
+        return [(2, 64, 4, 256), (8, 64, 8, 256), (8, 128, 4, 256)]
+    return [
+        (1, 128, 8, 1024),
+        (4, 256, 8, 1024),
+        (8, 512, 8, 1024),
+        (8, 1024, 4, 1024),
+        (ACCEPT_BATCH, ACCEPT_CONTEXT, ACCEPT_PAGE, 1024),
+    ]
+
+
+def _build_case(jnp, jax, batch, context, page_size, max_seq, seed):
+    """Paged pools + block tables holding ``context`` live tokens each."""
+    max_blocks = -(-max_seq // page_size)
+    num_pages = 1 + batch * max_blocks  # page 0 is the trash page
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    pool_shape = (num_pages, page_size, NUM_KV_HEADS, HEAD_DIM)
+    pool_k = jax.random.normal(k1, pool_shape, jnp.float32)
+    pool_v = jax.random.normal(k2, pool_shape, jnp.float32)
+    q = jax.random.normal(k3, (batch, 1, NUM_HEADS, HEAD_DIM), jnp.float32)
+    bt = 1 + jnp.arange(batch * max_blocks, dtype=jnp.int32).reshape(
+        batch, max_blocks)
+    lengths = jnp.full((batch,), context, jnp.int32)
+    return q, pool_k, pool_v, bt, lengths
+
+
+def _time_call(fn, *args, reps: int):
+    out = fn(*args)  # warm the jit cache
+    out.block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps, out
+
+
+def _markdown(records, gate) -> str:
+    lines = [
+        "# Decode hot path: fused page-walk vs gather attention",
+        "",
+        f"One jitted decode-attention call, synthetic GQA shapes "
+        f"(H={NUM_HEADS}, KVH={NUM_KV_HEADS}, hd={HEAD_DIM}, fp32 pools), "
+        "pool sized for the max_seq worst case while requests hold only "
+        "`context` live tokens.  Bytes are the kernel module's modeled KV "
+        "traffic per step per layer.",
+        "",
+        "| batch | context | page | max_seq | fused us | gather us | "
+        "speedup | fused MB | gather MB | bytes ratio | max dlogit |",
+        "|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in records:
+        lines.append(
+            f"| {r['batch']} | {r['context']} | {r['page_size']} "
+            f"| {r['max_seq']} | {r['fused_us']:.0f} | {r['gather_us']:.0f} "
+            f"| {r['speedup']:.2f}x | {r['fused_bytes'] / 2**20:.3f} "
+            f"| {r['gather_bytes'] / 2**20:.3f} | {r['bytes_ratio']:.1f}x "
+            f"| {r['max_abs_diff']:.2e} |")
+    lines += [
+        "",
+        f"Acceptance point (B={gate['batch']}, context={gate['context']}, "
+        f"page={gate['page_size']}): fused {gate['speedup']:.2f}x faster, "
+        f"modeled KV traffic {gate['bytes_ratio']:.1f}x smaller "
+        f"(floor {BYTES_RATIO_FLOOR:.0f}x).",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def hotpath(out_dir: str | None = None, smoke: bool = False):
+    """Returns (rows, err) per the benchmarks.run contract; writes the files."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.paged_attention import paged_decode_attention
+    from repro.kernels.paged_attention_fused import (
+        fused_decode_bytes_moved, fused_paged_decode_attention,
+        gather_decode_bytes_moved)
+    from repro.serving import FUSED_LOGIT_TOL
+
+    out_dir = out_dir or os.environ.get("HOTPATH_OUT", "reports")
+    reps = 5 if smoke else 20
+    fused_fn = jax.jit(
+        lambda *a: fused_paged_decode_attention(*a, num_heads=NUM_HEADS,
+                                                impl="xla"))
+    gather_fn = jax.jit(
+        lambda *a: paged_decode_attention(*a, num_heads=NUM_HEADS))
+
+    records = []
+    worst_diff = 0.0
+    for seed, (batch, context, page_size, max_seq) in enumerate(_grid(smoke)):
+        args = _build_case(jnp, jax, batch, context, page_size, max_seq, seed)
+        fused_s, fused_out = _time_call(fused_fn, *args, reps=reps)
+        gather_s, gather_out = _time_call(gather_fn, *args, reps=reps)
+        diff = float(jnp.max(jnp.abs(fused_out.astype(jnp.float32)
+                                     - gather_out.astype(jnp.float32))))
+        worst_diff = max(worst_diff, diff)
+        lengths = [context] * batch
+        fused_bytes = fused_decode_bytes_moved(
+            lengths, page_size=page_size, num_kv_heads=NUM_KV_HEADS,
+            head_dim=HEAD_DIM)
+        gather_bytes = gather_decode_bytes_moved(
+            batch=batch, max_blocks=-(-max_seq // page_size),
+            page_size=page_size, num_kv_heads=NUM_KV_HEADS,
+            num_heads=NUM_HEADS, head_dim=HEAD_DIM)
+        records.append({
+            "batch": batch, "context": context, "page_size": page_size,
+            "max_seq": max_seq,
+            "fused_us": fused_s * 1e6, "gather_us": gather_s * 1e6,
+            "fused_steps_per_s": 1.0 / fused_s,
+            "gather_steps_per_s": 1.0 / gather_s,
+            "fused_tok_per_s": batch / fused_s,
+            "gather_tok_per_s": batch / gather_s,
+            "speedup": gather_s / fused_s,
+            "fused_bytes": fused_bytes, "gather_bytes": gather_bytes,
+            "bytes_ratio": gather_bytes / fused_bytes,
+            "max_abs_diff": diff,
+        })
+
+    gate = records[-1]  # the acceptance point closes both grids
+    err = 0.0
+    if gate["speedup"] < 1.0:
+        err += 1.0  # fused must beat gather where the paper's regime lives
+    if gate["bytes_ratio"] < BYTES_RATIO_FLOOR:
+        err += 1.0  # modeled KV traffic must drop >= 4x
+    if worst_diff > FUSED_LOGIT_TOL:
+        err += 1.0  # speed must not come from wrong attention
+
+    os.makedirs(out_dir, exist_ok=True)
+    json_path = os.path.join(out_dir, "hotpath.json")
+    with open(json_path, "w") as fh:
+        json.dump({
+            "dims": {"num_heads": NUM_HEADS, "num_kv_heads": NUM_KV_HEADS,
+                     "head_dim": HEAD_DIM, "dtype": "float32"},
+            "smoke": smoke, "reps": reps, "grid": records,
+            "acceptance": {
+                "point": {k: gate[k]
+                          for k in ("batch", "context", "page_size")},
+                "fused_beats_gather": gate["speedup"] >= 1.0,
+                "speedup": gate["speedup"],
+                "bytes_ratio": gate["bytes_ratio"],
+                "bytes_ratio_floor": BYTES_RATIO_FLOOR,
+                "max_abs_diff": worst_diff,
+                "tol": FUSED_LOGIT_TOL,
+            },
+        }, fh, indent=2)
+    md_path = os.path.join(out_dir, "hotpath.md")
+    with open(md_path, "w") as fh:
+        fh.write(_markdown(records, gate))
+
+    rows = []
+    for r in records:
+        tag = f"B{r['batch']}_ctx{r['context']}_page{r['page_size']}"
+        rows += [
+            (f"{tag}_fused_steps_per_s", f"{r['fused_steps_per_s']:.1f}", None),
+            (f"{tag}_gather_steps_per_s",
+             f"{r['gather_steps_per_s']:.1f}", None),
+            (f"{tag}_speedup", f"{r['speedup']:.2f}x", None),
+            (f"{tag}_bytes_ratio", f"{r['bytes_ratio']:.1f}x", None),
+        ]
+    rows += [
+        ("acceptance_fused_beats_gather", str(gate["speedup"] >= 1.0), None),
+        ("acceptance_speedup", f"{gate['speedup']:.2f}x", None),
+        ("acceptance_bytes_ratio", f"{gate['bytes_ratio']:.1f}x", None),
+        ("max_abs_diff_vs_oracle", f"{worst_diff:.3e}", None),
+        ("json", json_path, None),
+        ("markdown", md_path, None),
+    ]
+    return rows, err

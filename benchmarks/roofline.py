@@ -1,6 +1,10 @@
 """Aggregate the dry-run JSONs into the §Roofline table (per arch x shape x
 mesh: three terms, dominant bottleneck, MODEL_FLOPS ratio, roofline fraction)
-and emit the markdown EXPERIMENTS.md consumes."""
+and emit the markdown EXPERIMENTS.md consumes.  Also folds in the decode
+KV-traffic model from ``reports/hotpath.json`` (written by
+``benchmarks.run hotpath``): decode attention is the memory-bound term of
+the serving hot path, and the fused page walk moves O(len·KVH) bytes where
+the gather path moves O(max_blocks·page_size·H)."""
 
 from __future__ import annotations
 
@@ -8,6 +12,8 @@ import json
 import os
 
 DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+HOTPATH_REPORT = os.path.join(os.path.dirname(__file__), "..", "reports",
+                              "hotpath.json")
 
 
 def load_records(dryrun_dir: str = DRYRUN_DIR) -> list[dict]:
@@ -53,8 +59,47 @@ def markdown_table(dryrun_dir: str = DRYRUN_DIR, mesh: str = "16x16") -> str:
     return "\n".join(lines)
 
 
+def decode_traffic_rows(report_path: str = HOTPATH_REPORT):
+    """Modeled decode-attention KV bytes/step per hotpath grid point.
+
+    Rows for benchmarks.run / EXPERIMENTS.md from the committed hotpath
+    report; empty when the report has not been generated yet."""
+    rows = []
+    if not os.path.isfile(report_path):
+        return rows, 0.0
+    with open(report_path) as f:
+        rep = json.load(f)
+    for r in rep["grid"]:
+        tag = f"B{r['batch']}_ctx{r['context']}_page{r['page_size']}"
+        rows.append((f"{tag}_fused_kv_bytes", r["fused_bytes"], None))
+        rows.append((f"{tag}_gather_kv_bytes", r["gather_bytes"], None))
+        rows.append((f"{tag}_kv_bytes_ratio",
+                     round(r["bytes_ratio"], 2), None))
+    return rows, 0.0
+
+
+def decode_traffic_markdown(report_path: str = HOTPATH_REPORT) -> str:
+    rows, _ = decode_traffic_rows(report_path)
+    if not rows:
+        return "(no reports/hotpath.json — run `python -m benchmarks.run hotpath`)"
+    lines = [
+        "| point | fused KV MiB/step | gather KV MiB/step | ratio |",
+        "|---|---|---|---|",
+    ]
+    for i in range(0, len(rows), 3):
+        tag = rows[i][0].removesuffix("_fused_kv_bytes")
+        fused_b, gather_b, ratio = rows[i][1], rows[i + 1][1], rows[i + 2][1]
+        lines.append(f"| {tag} | {fused_b / 2**20:.3f} "
+                     f"| {gather_b / 2**20:.3f} | {ratio}x |")
+    return "\n".join(lines)
+
+
 def main():
     print(markdown_table())
+    print()
+    print("## Decode attention KV traffic (modeled, per layer per step)")
+    print()
+    print(decode_traffic_markdown())
 
 
 if __name__ == "__main__":

@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import inspect
 import sys
 import time
 
@@ -35,6 +36,7 @@ BENCH_SPECS: list[tuple[str, str, str, dict]] = [
     ("sweetspot", "benchmarks.sweetspot_bench", "sweetspot", {}),
     ("plan", "benchmarks.plan_bench", "plan", {}),
     ("serving", "benchmarks.serving_bench", "serving", {}),
+    ("hotpath", "benchmarks.hotpath_bench", "hotpath", {}),
     ("grid", "benchmarks.grid_bench", "grid", {}),
     ("stochastic", "benchmarks.stochastic_bench", "stochastic", {}),
     ("ugemm_accuracy", "benchmarks.accuracy_bench", "ugemm_accuracy", {}),
@@ -66,6 +68,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="include the slow per-arch sparsity profiling sweep")
     ap.add_argument("--details", action="store_true",
                     help="print every table row, not just the CSV summary")
+    ap.add_argument("--smoke", action="store_true",
+                    help="shrink benchmarks that take a smoke=... kwarg "
+                         "(currently: hotpath) to CI-sized grids")
     ap.add_argument("only", nargs="*", metavar="name",
                     help="run only the named benchmarks")
     args = ap.parse_args(sys.argv[1:] if argv is None else argv)
@@ -89,6 +94,8 @@ def main(argv: list[str] | None = None) -> int:
     for name, module, attr, kw in specs:
         try:
             fn = getattr(importlib.import_module(module), attr)
+            if args.smoke and "smoke" in inspect.signature(fn).parameters:
+                kw = dict(kw, smoke=True)
             rows, err, us = _timed(fn, **kw)
             derived = err if err is not None else len(rows)
             print(f"{name},{us:.0f},{derived:.6f}")

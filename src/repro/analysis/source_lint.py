@@ -59,7 +59,8 @@ _SCOPE_MANAGERS = {"scoped_registry", "kernel_backends"}
 _EXECUTE_PATH_PARTS = ("repro/backends/", "repro/kernels/", "repro/serving/")
 _PACKED_KERNEL_PARTS = ("kernels/packed_gemm",)
 _EXACT_KERNEL_PREFIXES = ("bgemm", "tugemm", "tubgemm", "tu_gemm",
-                          "tub_gemm", "quant_gemm")
+                          "tub_gemm", "quant_gemm",
+                          "fused_paged", "_fused_decode")
 _CONTRACTION_FUNCS = {"einsum", "matmul", "dot", "dot_general", "tensordot"}
 _INT_DTYPES = {"int8", "int16", "int32", "int64"}
 

@@ -62,7 +62,8 @@ from repro.eval import sweetspot as sweetspot_lib
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_grid_mesh, single_device_mesh
 from repro.models import model as model_lib
-from repro.serving import (ServingEngine, TrafficConfig, generate_trace,
+from repro.serving import (FUSED_LOGIT_TOL, ServingEngine, TrafficConfig,
+                           fused_vs_gather_probe, generate_trace,
                            paged_vs_contiguous_probe)
 from repro.serving import energy as serving_energy
 
@@ -520,12 +521,14 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
     tcfg = TrafficConfig(num_requests=args.requests,
                          arrival_rate=args.arrival_rate, seed=args.seed)
     trace = generate_trace(tcfg)
-    engine = ServingEngine(
-        cfg, params, max_batch=args.batch, page_size=args.page_size,
+    engine_kw = dict(
+        max_batch=args.batch, page_size=args.page_size,
         num_pages=args.num_pages, max_seq_len=args.max_seq_len,
         backend=args.execute_backend, plan=plan, bits=args.bits, grid=grid,
         unit_n=args.unit_n, num_units=args.units,
         pricing_design=args.gemm_backend, packed=args.packed)
+    engine = ServingEngine(cfg, params, attention=args.decode_attention,
+                           **engine_kw)
     scope = (f"plan {args.backend_plan}" if plan is not None
              else f"backend {args.execute_backend}@{args.bits}"
              if args.execute_backend else "float model")
@@ -573,12 +576,28 @@ def run_traffic_mode(args, cfg, params, grid, plan) -> int:
           f"{complete}; per-request token streams identical: "
           f"{same_tokens}{note}")
     ok = ok and complete and (same_tokens or not strict)
+    if args.decode_attention == "fused":
+        # replay the continuous run on the gather oracle: the fused page
+        # walk may move logits by <= FUSED_LOGIT_TOL, but the sampled token
+        # streams must be identical whenever the identity gate is strict
+        gather_engine = ServingEngine(cfg, params, attention="gather",
+                                      **engine_kw)
+        with common_lib.activation_scaling(args.act_scale):
+            rg = gather_engine.run(trace, "continuous")
+        fused_same = rc.request_tokens == rg.request_tokens
+        print(f"fused vs gather decode token streams (continuous): "
+              f"identical: {fused_same}{note}")
+        ok = ok and (fused_same or not strict)
     if grid is None:
         diff = paged_vs_contiguous_probe(cfg, params,
                                          page_size=args.page_size)
         tag = "bit-exact" if diff == 0.0 else f"max |diff| {diff:.3e}"
         print(f"paged decode vs contiguous decode_step (fp32): {tag}")
         ok = ok and diff == 0.0
+        fdiff = fused_vs_gather_probe(cfg, params, page_size=args.page_size)
+        print(f"fused page-walk vs gather oracle (fp32): max |dlogit| "
+              f"{fdiff:.3e} (tol {FUSED_LOGIT_TOL:.0e})")
+        ok = ok and fdiff <= FUSED_LOGIT_TOL
     return 0 if ok else 1
 
 
@@ -643,6 +662,16 @@ def main() -> int:
     ap.add_argument("--max-seq-len", type=int, default=64,
                     help="[traffic] per-request position budget "
                          "(prompt + output)")
+    ap.add_argument("--decode-attention", default="fused",
+                    choices=["fused", "gather"],
+                    help="[traffic] decode attention path: 'fused' walks "
+                         "each block table page-by-page with online softmax "
+                         "(O(len*KVH) KV traffic; the default), 'gather' "
+                         "materializes the padded KV view (the bit-exact "
+                         "oracle).  Under 'fused' the continuous run is "
+                         "replayed on the gather path and the sampled "
+                         "token streams must match exactly whenever the "
+                         "scheduler-identity gate is strict")
     ap.add_argument("--packed", action="store_true",
                     help="freeze every planned site's weight bit-packed "
                          "(int32 words, 32/bits codes each) at its assigned "

@@ -34,7 +34,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
-from collections import deque
+from collections import OrderedDict, deque
 
 import jax
 import jax.numpy as jnp
@@ -43,11 +43,12 @@ import numpy as np
 from repro import backends as backends_lib
 from repro.backends.runtime import site_scope
 from repro.kernels import paged_attention as paged_lib
+from repro.kernels import paged_attention_fused as fused_lib
 from repro.launch.mesh import make_grid_mesh, single_device_mesh
 from repro.models import attention as attn_lib
 from repro.models import model as model_lib
 from repro.models import rope as rope_lib
-from repro.models.common import dense, rmsnorm
+from repro.models.common import activation_scale_mode, dense, rmsnorm
 from repro.models.config import ModelConfig
 from repro.models.mlp import mlp_fwd
 from repro.serving.energy import EnergyModel
@@ -56,7 +57,34 @@ from repro.serving.scheduler import (Request, RequestState, _SchedulerBase,
                                      make_scheduler)
 from repro.serving.traffic import TrafficRequest
 
-__all__ = ["ServingEngine", "ServingReport", "paged_vs_contiguous_probe"]
+__all__ = ["ServingEngine", "ServingReport", "paged_vs_contiguous_probe",
+           "fused_vs_gather_probe", "FUSED_LOGIT_TOL"]
+
+#: gated max |Δlogit| between the fused online-softmax decode path and the
+#: bit-exact gather oracle on the fp32 smoke probe — online softmax
+#: re-associates the reduction, so exact equality is not the contract; the
+#: sampled token streams still must match exactly on the seeded traces.
+FUSED_LOGIT_TOL = 1e-4
+
+#: shared, bounded cache of jitted prefill callables.  Keyed on everything
+#: the *trace* depends on — (cfg, backend/plan scope, grid, activation-scale
+#: mode, padded prompt bucket) — so any two ServingEngine instances with
+#: identical keys reuse one compiled entry instead of recompiling per
+#: engine construction, and the cache cannot grow without bound across a
+#: long-lived benchmark process.
+PREFILL_CACHE_MAXSIZE = 32
+_PREFILL_FNS: OrderedDict[tuple, object] = OrderedDict()
+
+
+def _prefill_cache_get(key: tuple, make):
+    fn = _PREFILL_FNS.get(key)
+    if fn is None:
+        fn = _PREFILL_FNS[key] = make()
+        while len(_PREFILL_FNS) > PREFILL_CACHE_MAXSIZE:
+            _PREFILL_FNS.popitem(last=False)
+    else:
+        _PREFILL_FNS.move_to_end(key)
+    return fn
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,8 +145,10 @@ def paged_vs_contiguous_probe(cfg: ModelConfig, params, *, batch: int = 2,
 
     cfg = dataclasses.replace(cfg, compute_dtype="float32")
     total = prompt_len + steps + 1
+    # the gather path is the bit-exactness oracle; the fused path is held
+    # to FUSED_LOGIT_TOL by fused_vs_gather_probe instead
     engine = ServingEngine(cfg, params, max_batch=batch, page_size=page_size,
-                           max_seq_len=_bucket(total))
+                           max_seq_len=_bucket(total), attention="gather")
     rng = np.random.default_rng(1234)
     prompts = rng.integers(0, cfg.vocab_size,
                            (batch, prompt_len)).astype(np.int32)
@@ -148,7 +178,7 @@ def paged_vs_contiguous_probe(cfg: ModelConfig, params, *, batch: int = 2,
             pos = prompt_len + i
             ref_logits, caches = decode_step(params, tok_ref, caches,
                                              jnp.int32(pos))
-            lg, k_pool, v_pool = engine._decode(
+            lg, k_pool, v_pool, _ = engine._decode(
                 params, tok_paged, cache.k_pool, cache.v_pool,
                 jnp.asarray(btables), jnp.full((batch,), pos, jnp.int32),
                 jnp.ones((batch,), bool))
@@ -157,6 +187,59 @@ def paged_vs_contiguous_probe(cfg: ModelConfig, params, *, batch: int = 2,
                 lg[:, 0] - ref_logits[:, 0]))))
             tok_ref = jnp.argmax(ref_logits[:, -1:], axis=-1).astype(jnp.int32)
             tok_paged = jnp.argmax(lg[:, :1], axis=-1).astype(jnp.int32)
+    return worst
+
+
+def fused_vs_gather_probe(cfg, params, *, batch: int = 2, prompt_len: int = 5,
+                          steps: int = 3, page_size: int = 4,
+                          attention_impl: str = "auto") -> float:
+    """Max |fused − gather| decode logit difference at fp32.
+
+    Runs aligned decode steps through two engines sharing one paged cache —
+    one on the fused page-walk kernel, one on the gather oracle — feeding
+    both the oracle's argmax token each step, and returns the worst
+    absolute logit difference.  The fused path's online softmax
+    re-associates the reduction, so the contract is ``<= FUSED_LOGIT_TOL``
+    (gated in ``serve traffic``, ``benchmarks.hotpath_bench`` and the
+    tier-1 tests), not bit-exactness; exact parity of the *sampled token
+    streams* on seeded traces is asserted separately.
+    """
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    total = prompt_len + steps + 1
+    kw = dict(max_batch=batch, page_size=page_size,
+              max_seq_len=_bucket(total))
+    fused = ServingEngine(cfg, params, attention="fused",
+                          attention_impl=attention_impl, **kw)
+    gather = ServingEngine(cfg, params, attention="gather", **kw)
+    rng = np.random.default_rng(1234)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           (batch, prompt_len)).astype(np.int32)
+    cache = PagedKVCache(
+        num_layers=cfg.num_layers, num_kv_heads=cfg.num_kv_heads,
+        head_dim=cfg.resolved_head_dim, num_pages=fused.num_pages,
+        page_size=page_size, max_seq_len=fused.max_seq_len)
+    btables = np.zeros((batch, cache.max_blocks), np.int32)
+    worst = 0.0
+    with fused._mesh:
+        for i in range(batch):
+            _, k_l, v_l = gather._prefill(jnp.asarray(prompts[i: i + 1]))
+            cache.allocate(i, total)
+            cache.write_prefill(i, k_l[:, 0, :prompt_len],
+                                v_l[:, 0, :prompt_len])
+            btables[i] = cache.block_table_row(i)
+        tok = jnp.asarray(prompts[:, -1:])  # any aligned token works
+        for i in range(steps):
+            pos = prompt_len + i
+            args = (jnp.asarray(btables), jnp.full((batch,), pos, jnp.int32),
+                    jnp.ones((batch,), bool))
+            lg_f, _, _, _ = fused._decode(params, tok, cache.k_pool,
+                                          cache.v_pool, *args)
+            lg_g, k_pool, v_pool, _ = gather._decode(params, tok,
+                                                     cache.k_pool,
+                                                     cache.v_pool, *args)
+            cache.sync_pools(k_pool, v_pool)  # both paths scatter identically
+            worst = max(worst, float(jnp.max(jnp.abs(lg_f - lg_g))))
+            tok = jnp.argmax(lg_g[:, :1], axis=-1).astype(jnp.int32)
     return worst
 
 
@@ -169,7 +252,8 @@ class ServingEngine:
                  plan=None, bits: int = 4, grid: tuple[int, int] | None = None,
                  unit_n: int = 64, num_units: int = 64,
                  pricing_design: str | None = None, prompt_seed: int = 0,
-                 packed: bool = False):
+                 packed: bool = False, attention: str = "fused",
+                 attention_impl: str = "auto", batched_prefill: bool = True):
         if cfg.attention != "gqa" or cfg.ssm is not None or cfg.rwkv is not None \
                 or cfg.family not in ("dense", "audio", "vlm") or cfg.is_moe:
             raise ValueError(
@@ -210,9 +294,21 @@ class ServingEngine:
                     cfg, params, bits=bits, grid=grid)
         else:
             self._exec_params = params
+        if attention not in ("fused", "gather"):
+            raise ValueError(f"attention must be 'fused' or 'gather', "
+                             f"got {attention!r}")
+        if attention_impl not in ("auto", "xla", "pallas"):
+            raise ValueError(f"attention_impl must be 'auto', 'xla' or "
+                             f"'pallas', got {attention_impl!r}")
+        self.attention = attention
+        self.attention_impl = attention_impl
+        # interpret= fallback: the Pallas kernel emulates its grid on
+        # non-TPU hosts (the tier-1 CPU suite exercises exactly this)
+        self._fused_interpret = (attention_impl == "pallas"
+                                 and jax.default_backend() != "tpu")
+        self.batched_prefill = batched_prefill
         self._mesh = make_grid_mesh(*grid) if grid else single_device_mesh()
         self._decode = jax.jit(self._decode_fn)
-        self._prefill_fns: dict[int, object] = {}
 
     # -- jitted model steps ---------------------------------------------------
 
@@ -247,9 +343,15 @@ class ServingEngine:
                                                   k[:, 0], self.page_size)
                     pv = paged_lib.write_kv_token(pv, block_tables, lengths,
                                                   v[:, 0], self.page_size)
-                    out = paged_lib.paged_decode_attention(
-                        q, pk, pv, block_tables, lengths + 1,
-                        num_heads=cfg.num_heads)
+                    if self.attention == "fused":
+                        out = fused_lib.fused_paged_decode_attention(
+                            q, pk, pv, block_tables, lengths + 1,
+                            num_heads=cfg.num_heads, impl=self.attention_impl,
+                            interpret=self._fused_interpret)
+                    else:
+                        out = paged_lib.paged_decode_attention(
+                            q, pk, pv, block_tables, lengths + 1,
+                            num_heads=cfg.num_heads)
                     out = attn_lib._out_proj(lp["attn"], out, cfg)
                 xh = xh + out
                 h2 = rmsnorm(lp["ln2"], xh, cfg.rms_eps)
@@ -260,23 +362,42 @@ class ServingEngine:
         x, (new_k, new_v) = jax.lax.scan(
             body, x, (params["layers"], k_pool, v_pool))
         logits = model_lib.logits_out(params, cfg, x)
-        return logits, new_k, new_v
+        # lengths advance on-device so the host never re-uploads them
+        new_lengths = jnp.where(active, lengths + 1, lengths)
+        return logits, new_k, new_v, new_lengths
+
+    def _prefill_cache_key(self, s: int) -> tuple:
+        """Everything a compiled prefill's trace depends on, besides params.
+
+        The plan/backend scope and the activation-scale mode are bound at
+        trace time, so they are part of the key; parameter *values* (and
+        packed-vs-float storage) are jit arguments and retrace on their
+        own.  Engines built with equal keys share one compiled entry.
+        """
+        try:
+            plan_key = hash(self.plan) if self.plan is not None else None
+        except TypeError:  # unhashable plan object: no sharing across plans
+            plan_key = id(self.plan)
+        return (self.cfg, self.backend, self.bits, plan_key, self.grid,
+                activation_scale_mode(), s)
 
     def _prefill(self, tokens):
-        """(1, S) padded prompt -> (logits, stacked K, stacked V)."""
+        """(n, S) padded prompts -> (logits, stacked K, stacked V)."""
         s = tokens.shape[1]
-        fn = self._prefill_fns.get(s)
-        if fn is None:
-            cfg = self.cfg
+        cfg = self.cfg
 
+        def make():
             def prefill_fn(params, toks):
-                caches = model_lib.init_caches(cfg, 1, toks.shape[1],
+                caches = model_lib.init_caches(cfg, toks.shape[0],
+                                               toks.shape[1],
                                                dtype=jnp.float32)
                 logits, new = model_lib.prefill(params, cfg, toks,
                                                 caches=caches)
                 return logits, new["attn"]["k"], new["attn"]["v"]
 
-            fn = self._prefill_fns[s] = jax.jit(prefill_fn)
+            return jax.jit(prefill_fn)
+
+        fn = _prefill_cache_get(self._prefill_cache_key(s), make)
         return fn(self._exec_params, tokens)
 
     # -- host-side serving loop -----------------------------------------------
@@ -326,11 +447,17 @@ class ServingEngine:
                                  f"pages, pool holds {cache.allocator.capacity}")
 
         b = self.max_batch
-        tokens = np.zeros(b, np.int64)
-        lengths = np.zeros(b, np.int64)
+        lengths = np.zeros(b, np.int64)     # host mirror for cache bookkeeping
         active = np.zeros(b, bool)
-        btables = np.zeros((b, cache.max_blocks), np.int32)
         slot_req: list[Request | None] = [None] * b
+        # hot-path state lives device-resident: block tables and lengths are
+        # updated incrementally with .at[].set at admission/eviction (and
+        # lengths advance inside the jitted step itself), so the per-step
+        # host->device upload of (B, max_blocks) tables disappears
+        d_tokens = jnp.zeros((b, 1), jnp.int32)
+        d_lengths = jnp.zeros((b,), jnp.int32)
+        d_active = jnp.zeros((b,), bool)
+        d_btables = jnp.zeros((b, cache.max_blocks), jnp.int32)
 
         waiting = deque(Request(spec=r)
                         for r in sorted(trace, key=lambda r: (r.arrival_step,
@@ -347,34 +474,64 @@ class ServingEngine:
                      + 2 * sum(r.output_len + 1 for r in trace) + 16)
 
         def finish(req: Request, at: int, slot: int) -> None:
+            nonlocal d_tokens, d_lengths, d_active, d_btables
             req.state = RequestState.FINISHED
             req.finish_step = at
             cache.free_request(req.req_id)
             slot_req[slot] = None
             active[slot] = False
-            tokens[slot] = 0
             lengths[slot] = 0
-            btables[slot] = 0
+            d_tokens = d_tokens.at[slot, 0].set(0)
+            d_lengths = d_lengths.at[slot].set(0)
+            d_active = d_active.at[slot].set(False)
+            d_btables = d_btables.at[slot].set(0)   # back to the trash page
             finished.append(req)
             events.append((at, "evict", req.req_id))
 
-        def admit(req: Request, at: int) -> None:
+        def prefill_admissions(reqs: list[Request]) -> dict:
+            """req_id -> (last-logits row, K rows, V rows) for this step's
+            admissions — one jitted prefill call per ``_bucket(prompt_len)``
+            group (or per request when ``batched_prefill=False``).
+
+            Causal attention makes each padded prompt's valid prefix
+            independent of both the tail padding and the other prompts in
+            the batch, so grouping changes nothing the tests can see —
+            ``tests/test_paged_fused.py`` pins the token streams identical
+            to the per-request path.
+            """
+            groups: dict[object, list] = {}
+            for req in reqs:
+                key = (_bucket(req.spec.prompt_len) if self.batched_prefill
+                       else ("solo", req.spec.req_id))
+                groups.setdefault(key, []).append(req.spec)
+            out = {}
+            for specs in groups.values():
+                width = _bucket(max(s.prompt_len for s in specs))
+                padded = np.zeros((len(specs), width), np.int32)
+                for i, spec in enumerate(specs):
+                    padded[i, : spec.prompt_len] = self.prompt_tokens(spec)
+                logits, k_l, v_l = self._prefill(jnp.asarray(padded))
+                for i, spec in enumerate(specs):
+                    out[spec.req_id] = (logits[i, spec.prompt_len - 1],
+                                        k_l[:, i, : spec.prompt_len],
+                                        v_l[:, i, : spec.prompt_len])
+            return out
+
+        def admit(req: Request, at: int, last_logits, k_rows, v_rows) -> None:
+            nonlocal d_tokens, d_lengths, d_active, d_btables
             spec = req.spec
             cache.allocate(spec.req_id, spec.total_len)
-            prompt = self.prompt_tokens(spec)
-            padded = np.zeros((1, _bucket(spec.prompt_len)), np.int32)
-            padded[0, : spec.prompt_len] = prompt
-            logits, k_l, v_l = self._prefill(jnp.asarray(padded))
-            cache.write_prefill(spec.req_id,
-                                k_l[:, 0, : spec.prompt_len],
-                                v_l[:, 0, : spec.prompt_len])
-            first = int(jnp.argmax(logits[0, spec.prompt_len - 1]))
+            cache.write_prefill(spec.req_id, k_rows, v_rows)
+            first = int(jnp.argmax(last_logits))
             slot = next(i for i in range(b) if slot_req[i] is None)
             slot_req[slot] = req
-            tokens[slot] = first
             lengths[slot] = spec.prompt_len
             active[slot] = True
-            btables[slot] = cache.block_table_row(spec.req_id)
+            d_tokens = d_tokens.at[slot, 0].set(first)
+            d_lengths = d_lengths.at[slot].set(spec.prompt_len)
+            d_active = d_active.at[slot].set(True)
+            d_btables = d_btables.at[slot].set(
+                jnp.asarray(cache.block_table_row(spec.req_id), jnp.int32))
             req.state = RequestState.RUNNING
             req.admitted_step = at
             req.slot = slot
@@ -383,6 +540,12 @@ class ServingEngine:
             events.append((at, "admit", spec.req_id))
             nonlocal tokens_total, energy_uj
             tokens_total += 1
+            # charged exactly once per admission, at the prompt's TRUE row
+            # count (not the padded bucket, not the prefill group size); the
+            # first token comes off the prefill's last logits, so no decode
+            # tick is charged for it — tests/test_paged_fused.py pins
+            # energy == prefill(P) + decode-per-tick against the event
+            # stream so a double charge can never creep back in
             energy_uj += self.energy.prefill_energy_uj(spec.prompt_len)
             if req.generated >= spec.output_len:
                 finish(req, at, slot)
@@ -395,13 +558,14 @@ class ServingEngine:
                 # 1) decode the running set (admitted before this step)
                 n_active = int(active.sum())
                 if n_active:
-                    logits, k_pool, v_pool = self._decode(
-                        self._exec_params,
-                        jnp.asarray(tokens[:, None], jnp.int32),
-                        cache.k_pool, cache.v_pool, jnp.asarray(btables),
-                        jnp.asarray(lengths, jnp.int32), jnp.asarray(active))
+                    logits, k_pool, v_pool, d_lengths = self._decode(
+                        self._exec_params, d_tokens, cache.k_pool,
+                        cache.v_pool, d_btables, d_lengths, d_active)
                     cache.sync_pools(k_pool, v_pool)
-                    nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+                    nxt_dev = jnp.argmax(logits[:, 0],
+                                         axis=-1).astype(jnp.int32)
+                    d_tokens = nxt_dev[:, None]
+                    nxt = np.asarray(nxt_dev)
                     decode_ticks += 1
                     decoded_slots += n_active
                     energy_uj += self.energy.decode_energy_uj(n_active)
@@ -411,17 +575,20 @@ class ServingEngine:
                             continue
                         lengths[slot] += 1          # KV written for the input
                         cache.lengths[req.req_id] = int(lengths[slot])
-                        tokens[slot] = int(nxt[slot])
                         req.generated += 1
                         req_tokens[req.req_id].append(int(nxt[slot]))
                         tokens_total += 1
                         if req.generated >= req.spec.output_len:
                             finish(req, step, slot)
-                # 2) step boundary: admit arrivals (join decode next step)
-                for req in scheduler.admissions(step, list(waiting),
-                                                int(active.sum()), cache):
-                    waiting.remove(req)
-                    admit(req, step)
+                # 2) step boundary: admit arrivals (join decode next step);
+                # same-step admissions share one prefill call per bucket
+                admitted = scheduler.admissions(step, list(waiting),
+                                                int(active.sum()), cache)
+                if admitted:
+                    prefills = prefill_admissions(admitted)
+                    for req in admitted:
+                        waiting.remove(req)
+                        admit(req, step, *prefills[req.spec.req_id])
                 step += 1
 
         lat = np.array([r.latency for r in finished])
